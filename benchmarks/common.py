@@ -1,0 +1,33 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.sim import SimConfig, Simulation, colocated_apps, make_app, run_policy
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+# calibrated operating points (see EXPERIMENTS.md §Setup)
+RATE_SINGLE = {"QA": 7.0, "RG": 3.2, "CG": 1.9}
+RATE_COLOC = 2.8
+DUR = 150.0
+SEED = 1
+
+
+def sim(apps, policy: str, rate: float, duration: float = DUR, seed: int = SEED,
+        **kw):
+    t0 = time.time()
+    res = run_policy(apps, policy, rate=rate, duration=duration, seed=seed, **kw)
+    res.wall_s = time.time() - t0
+    return res
+
+
+def pct_gain(base: float, ours: float) -> float:
+    return 100.0 * (base - ours) / base
+
+
+def row(name: str, seconds_per_call: float, derived: str) -> Row:
+    return (name, seconds_per_call * 1e6, derived)

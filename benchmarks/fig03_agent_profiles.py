@@ -1,0 +1,31 @@
+"""Figs 3–6: inter-agent output-length / latency differences.
+
+Validates the motivating observation: agents differ strongly (Router vs
+Math/Humanities up to ~25x in latency) while each agent is stable across
+dataset groups.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, row, sim
+from repro.sim import make_app
+
+
+def run(quick: bool = True):
+    rows: list[Row] = []
+    groups = ["G+M"] if quick else ["G+M", "M+W", "S+S"]
+    for g in groups:
+        res = sim([make_app("QA", g)], "parrot", rate=6.0, duration=100.0)
+        by_agent = {}
+        for r in res.requests:
+            by_agent.setdefault(r.agent_name, []).append(r)
+        lat = {a: np.mean([x.exec_latency for x in rs]) for a, rs in by_agent.items()}
+        out = {a: np.mean([x.output_len for x in rs]) for a, rs in by_agent.items()}
+        spread = max(lat.values()) / max(min(lat.values()), 1e-9)
+        for a in sorted(lat):
+            rows.append(row(f"fig03.QA[{g}].{a}", lat[a],
+                            f"out_len={out[a]:.0f},exec_s={lat[a]:.2f}"))
+        rows.append(row(f"fig04.QA[{g}].latency_spread", 0.0,
+                        f"max/min={spread:.1f}x (paper: up to 25.1x)"))
+    return rows

@@ -1,0 +1,35 @@
+"""Fig. 7: queuing time under FCFS / Topology-aware / Oracle on the
+illustrative single-server example (HumanitiesAgent=5u, Router=1u,
+MathAgent=2u, Router=1u, all arriving at t=0).
+
+Oracle (true-remaining SJF) must be strictly best; Topo in between.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, row
+
+# (name, exec_units, topo_remaining_stages)
+REQS = [("H", 5.0, 1), ("R1", 1.0, 2), ("M", 2.0, 1), ("R2", 1.0, 2)]
+
+
+def total_wait(order) -> float:
+    t, wait = 0.0, 0.0
+    for name, ex, _ in order:
+        wait += t
+        t += ex
+    return wait
+
+
+def run(quick: bool = True):
+    fcfs = total_wait(REQS)
+    topo = total_wait(sorted(REQS, key=lambda r: r[2]))
+    oracle = total_wait(sorted(REQS, key=lambda r: r[1]))
+    assert oracle <= fcfs and oracle <= topo
+    return [
+        row("fig07.fcfs_total_wait", fcfs, f"{fcfs:.0f} units (paper diagram: 13)"),
+        row("fig07.topo_total_wait", topo,
+            f"{topo:.0f} units — on a single server, depth even loses to "
+            f"FCFS here: stage count is a poor latency proxy (paper: 12)"),
+        row("fig07.oracle_total_wait", oracle,
+            f"{oracle:.0f} units = SJF on true remaining time (paper: 7)"),
+    ]

@@ -1,0 +1,29 @@
+"""Fig. 8: under FCFS/Topo there is no useful correlation between queueing
+order and inference latency — the motivation for latency-aware priorities."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, row, sim
+from repro.sim import colocated_apps
+
+
+def _spearman(a, b) -> float:
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    return float((ra * rb).sum() / np.sqrt((ra ** 2).sum() * (rb ** 2).sum()))
+
+
+def run(quick: bool = True):
+    rows: list[Row] = []
+    for pol in ("parrot", "ayo"):
+        res = sim(colocated_apps(), pol, rate=2.8)
+        reqs = [r for r in res.requests if r.exec_start_time >= 0]
+        qrank = [r.exec_start_time for r in reqs]
+        lat = [r.exec_latency for r in reqs]
+        rho = _spearman(np.asarray(qrank), np.asarray(lat))
+        rows.append(row(f"fig08.{pol}.spearman", abs(rho),
+                        f"rho={rho:+.3f} (≈0 -> scheduling ignores latency)"))
+    return rows

@@ -1,0 +1,28 @@
+"""Fig. 14: end-to-end program-level token latency per individual
+application × dataset, Kairos vs Parrot vs Ayo (avg + P90).
+
+Paper: Kairos cuts avg latency 17.8–28.4% vs Parrot, 5.8–10.8% vs Ayo.
+"""
+from __future__ import annotations
+
+from benchmarks.common import RATE_SINGLE, Row, pct_gain, row, sim
+from repro.sim import make_app
+
+GROUPS = {"QA": ["G+M", "M+W", "S+S"], "RG": ["TQ", "NCD", "NQ"],
+          "CG": ["HE", "MBPP", "APPS"]}
+
+
+def run(quick: bool = True):
+    rows: list[Row] = []
+    for app, groups in GROUPS.items():
+        for g in (groups[:1] if quick else groups):
+            res = {p: sim([make_app(app, g)], p, rate=RATE_SINGLE[app])
+                   for p in ("parrot", "ayo", "kairos")}
+            s = {p: r.summary() for p, r in res.items()}
+            for metric in ("avg", "p90"):
+                k, pa, ay = (s[p][metric] for p in ("kairos", "parrot", "ayo"))
+                rows.append(row(
+                    f"fig14.{app}[{g}].{metric}", k,
+                    f"kairos={k*1e3:.1f}ms vs parrot {pct_gain(pa, k):+.1f}% "
+                    f"vs ayo {pct_gain(ay, k):+.1f}% (paper avg: 17.8-28.4%/5.8-10.8%)"))
+    return rows

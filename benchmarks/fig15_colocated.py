@@ -1,0 +1,24 @@
+"""Fig. 15: co-located QA+RG+CG on the shared 8B-class LLM fleet.
+
+Paper: Kairos vs Parrot -45.1..-72.8% avg, -69.6..-81.9% P99;
+vs Ayo -6.1..-37.9% avg."""
+from __future__ import annotations
+
+from benchmarks.common import RATE_COLOC, Row, pct_gain, row, sim
+from repro.sim import colocated_apps
+
+
+def run(quick: bool = True):
+    apps = colocated_apps()
+    rates = [RATE_COLOC] if quick else [2.4, 2.8, 3.2]
+    rows: list[Row] = []
+    for rate in rates:
+        s = {p: sim(apps, p, rate=rate).summary()
+             for p in ("parrot", "ayo", "kairos")}
+        for metric in ("avg", "p90", "p95", "p99"):
+            k = s["kairos"][metric]
+            rows.append(row(
+                f"fig15.rate{rate}.{metric}", k,
+                f"kairos={k*1e3:.1f}ms vs parrot {pct_gain(s['parrot'][metric], k):+.1f}% "
+                f"vs ayo {pct_gain(s['ayo'][metric], k):+.1f}%"))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 17 / §7.5: scalability to a 13B-class model (co-located workload).
+
+Paper: Kairos vs Parrot -42.1..-57.4% avg; vs Ayo -21.8..-24.6% avg."""
+from __future__ import annotations
+
+from benchmarks.common import Row, pct_gain, row, sim
+from repro.sim import LLAMA2_13B, colocated_apps
+
+
+def run(quick: bool = True):
+    apps = colocated_apps()
+    rate = 1.7   # 13B-class is ~1.7x slower per token
+    s = {p: sim(apps, p, rate=rate, cost=LLAMA2_13B).summary()
+         for p in ("parrot", "ayo", "kairos")}
+    rows: list[Row] = []
+    for metric in ("avg", "p90", "p99"):
+        k = s["kairos"][metric]
+        rows.append(row(
+            f"fig17.13b.{metric}", k,
+            f"kairos={k*1e3:.1f}ms vs parrot {pct_gain(s['parrot'][metric], k):+.1f}% "
+            f"vs ayo {pct_gain(s['ayo'][metric], k):+.1f}% "
+            f"(paper avg: -42..-57%/-22..-25%)"))
+    return rows

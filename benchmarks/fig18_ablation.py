@@ -1,0 +1,28 @@
+"""Fig. 18 / §7.6: ablations — w/o priority scheduling and w/o memory-aware
+packing, across request rates.
+
+Paper: priority gives 1.63x at the 50%-queueing point (38.8–69.6% across
+rates); packing gives 1.12x (9.5–10.6%)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, pct_gain, row, sim
+from repro.sim import colocated_apps
+
+
+def run(quick: bool = True):
+    apps = colocated_apps()
+    rates = [2.8] if quick else [2.0, 2.4, 2.8, 3.2]
+    rows: list[Row] = []
+    for rate in rates:
+        s = {p: sim(apps, p, rate=rate).summary()
+             for p in ("kairos", "w/o-priority", "w/o-packing")}
+        k = s["kairos"]["avg"]
+        rows.append(row(f"fig18.rate{rate}.priority_effect",
+                        s["w/o-priority"]["avg"] / k,
+                        f"{s['w/o-priority']['avg']/k:.2f}x slower w/o priority "
+                        f"(paper: 1.63x @50% queueing)"))
+        rows.append(row(f"fig18.rate{rate}.packing_effect",
+                        s["w/o-packing"]["avg"] / k,
+                        f"{s['w/o-packing']['avg']/k:.2f}x slower w/o packing "
+                        f"(paper: 1.12x)"))
+    return rows

@@ -1,0 +1,39 @@
+"""Kernel microbenchmark: paged-attention ref backend (what the engine runs
+on CPU) + arithmetic-intensity figures for the TPU-target kernel."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, row
+from repro.kernels.ref import paged_attention_ref
+
+
+def run(quick: bool = True):
+    rows: list[Row] = []
+    b, kv, g, hd, bs, nb = 8, 8, 4, 128, 16, 64      # 1k context
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, kv, g, hd), jnp.bfloat16)
+    kp = jax.random.normal(key, (512, bs, kv, hd), jnp.bfloat16)
+    vp = jax.random.normal(key, (512, bs, kv, hd), jnp.bfloat16)
+    bt = jnp.arange(b * nb, dtype=jnp.int32).reshape(b, nb) % 512
+    cl = jnp.full((b,), nb * bs, jnp.int32)
+
+    f = jax.jit(paged_attention_ref)
+    f(q, kp, vp, bt, cl).block_until_ready()
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        out = f(q, kp, vp, bt, cl)
+    out.block_until_ready()
+    t = (time.perf_counter() - t0) / reps
+    ctx = nb * bs
+    flops = 4 * b * kv * g * ctx * hd
+    bytes_moved = 2 * b * ctx * kv * hd * 2          # K+V reads, bf16
+    ai = flops / bytes_moved
+    rows.append(row("kernel.paged_attn.ref_cpu", t,
+                    f"ctx={ctx},ai={ai:.2f}flop/B (memory-bound on TPU: "
+                    f"{bytes_moved/819e9*1e6:.1f}us HBM-limited)"))
+    return rows

@@ -1,0 +1,61 @@
+"""§7.7: Kairos overheads — MDS priority recomputation vs agent count,
+queue sorting, time-slot packing evaluation.
+
+Paper: MDS 0.1s..4.3s for 10..5000 agents; sort ~3.6ms; packing ~4.1ms.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, row
+from repro.core import InstanceModel, KairosScheduler, TimeSlotDispatcher, agent_priorities, make_ramp
+from repro.serving.request import Request
+
+
+def _time(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(0)
+    rows: list[Row] = []
+    for n_agents in ([10, 100, 500] if quick else [10, 100, 500, 2000, 5000]):
+        samples = {("app", f"a{i}"): rng.lognormal(rng.uniform(0, 3), 0.5, 64)
+                   for i in range(n_agents)}
+        t = _time(lambda: agent_priorities(samples), reps=1 if n_agents > 500 else 3)
+        rows.append(row(f"overhead.mds.{n_agents}_agents", t,
+                        f"{t:.3f}s (paper: 0.1-4.3s for 10-5000)"))
+
+    # queue sorting (paper: ~3.6 ms)
+    scores = {f"a{i}": float(i) for i in range(50)}
+    sched = KairosScheduler(lambda app, a: scores[a])
+    queue = [Request(agent_name=f"a{rng.integers(50)}", msg_id=str(i),
+                     arrival_time=float(i), app_start_time=float(i))
+             for i in range(1000)]
+    t = _time(lambda: sched.order(queue))
+    rows.append(row("overhead.sort.1000_requests", t, f"{t*1e3:.2f}ms (paper ~3.6ms)"))
+
+    # time-slot packing evaluation (paper: ~4.1 ms)
+    insts = [InstanceModel(i, 100_000) for i in range(4)]
+    disp = TimeSlotDispatcher(insts)
+    for i in range(200):
+        disp.instances[i % 4].ramps[i] = make_ramp(300, 20.0, 25.0, float(i % 17))
+    req = Request(agent_name="x", msg_id="m")
+    ramp = make_ramp(300, 20.0, 25.0, 20.0)
+
+    def pack():
+        disp._cache_now = float("nan")
+        disp.dispatch(req, ramp, 20.0)
+        for inst in disp.instances.values():
+            inst.ramps.pop(req.req_id, None)
+
+    t = _time(pack)
+    rows.append(row("overhead.packing.4x200_ramps", t, f"{t*1e3:.2f}ms (paper ~4.1ms)"))
+    return rows

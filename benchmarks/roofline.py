@@ -1,0 +1,116 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Per (arch × shape × mesh):
+    compute term    = HLO_FLOPs_per_dev / peak_FLOP/s
+    memory term     = HLO_bytes_per_dev / HBM_bw
+    collective term = collective_bytes_per_dev / link_bw
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the useful-
+compute ratio MODEL_FLOPS / (HLO_FLOPs × n_dev).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment brief).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+HEADER = ("arch", "shape", "mesh", "t_compute", "t_memory", "t_collective",
+          "bottleneck", "model_flops", "useful_ratio", "peak_GiB_dev")
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """MODEL_FLOPS = 6·N·D with N = active params, D = tokens processed."""
+    from repro.configs import INPUT_SHAPES, get_config
+    cfg = get_config(arch)
+    sc = INPUT_SHAPES[shape]
+    n = cfg.active_param_count()
+    if sc.kind == "train":
+        d = sc.global_batch * sc.seq_len
+        return 6.0 * n * d                       # fwd + bwd
+    if sc.kind == "prefill":
+        d = sc.global_batch * sc.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * sc.global_batch             # decode: one token per seq
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    """Blend of sources (see module docstring + EXPERIMENTS.md §Roofline):
+    compute/memory terms from the exact analytic model (XLA cost_analysis
+    under-counts lax.scan bodies); collective term from the compiled HLO
+    with while-trip-count correction; peak memory from buffer assignment
+    (loop-correct)."""
+    if rec.get("status") != "ok":
+        return None
+    from benchmarks.analytic import roofline_terms
+    coll = rec.get("collectives", {}) or {}
+    coll_bytes = float(sum(v for v in coll.values() if isinstance(v, (int, float))))
+    n_dev = rec.get("n_devices", 256)
+
+    at = roofline_terms(rec["arch"], rec["shape"], n_dev, PEAK_FLOPS, HBM_BW)
+    t_c, t_m = at["t_compute"], at["t_memory"]
+    t_x = coll_bytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / (at["flops_dev"] * n_dev) if at["flops_dev"] else float("nan")
+    peak = ((rec.get("memory") or {}).get("peak_bytes") or 0) / 2 ** 30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "bottleneck": bottleneck, "model_flops": mf, "useful_ratio": useful,
+        "peak_GiB_dev": peak, "collective_bytes_dev": coll_bytes,
+        "hlo_flops_dev": (rec.get("cost", {}) or {}).get("flops"),
+        "analytic_flops_dev": at["flops_dev"], "analytic_bytes_dev": at["bytes_dev"],
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def render_table(rows: List[Dict]) -> str:
+    out = []
+    out.append(f"{'arch':22s} {'shape':12s} {'mesh':8s} {'compute':>9s} "
+               f"{'memory':>9s} {'collect':>9s} {'bound':>10s} {'useful':>7s} "
+               f"{'GiB/dev':>8s}")
+    for r in rows:
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{fmt_s(r['t_compute']):>9s} {fmt_s(r['t_memory']):>9s} "
+            f"{fmt_s(r['t_collective']):>9s} {r['bottleneck']:>10s} "
+            f"{r['useful_ratio']*100:6.1f}% {r['peak_GiB_dev']:8.2f}")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-json", default="experiments/dryrun.json")
+    ap.add_argument("--out", default="experiments/roofline.json")
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 or 2x16x16")
+    args = ap.parse_args(argv)
+    with open(args.dryrun_json) as f:
+        records = json.load(f)
+    rows = [r for r in (analyze_record(rec) for rec in records) if r]
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    print(render_table(rows))
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs every dataset
+group / rate point (longer); default is the quick representative subset.
+Roofline (deliverable g) reads the dry-run artifact: run
+``python -m repro.launch.dryrun --all --out experiments/dryrun.json`` first,
+then ``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter on module name")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig03_agent_profiles,
+        fig07_queuing_example,
+        fig08_rank_correlation,
+        fig09_dispatch_preemption,
+        fig14_single_app,
+        fig15_colocated,
+        fig16_sorting_accuracy,
+        fig17_larger_llm,
+        fig18_ablation,
+        kernel_bench,
+        overhead,
+    )
+
+    modules = [fig03_agent_profiles, fig07_queuing_example, fig08_rank_correlation,
+               fig09_dispatch_preemption, fig14_single_app, fig15_colocated,
+               fig16_sorting_accuracy, fig17_larger_llm, fig18_ablation,
+               overhead, kernel_bench]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        name = mod.__name__.split(".")[-1]
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+            for n, us, derived in rows:
+                print(f"{n},{us:.2f},{derived}", flush=True)
+        except Exception as e:  # keep the suite going
+            failures += 1
+            print(f"{name},nan,ERROR: {type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.agents.base import BaseAgent, Workflow
+from repro.agents.messaging import Headers, Message, MessageBus
+
+__all__ = ["BaseAgent", "Workflow", "Headers", "Message", "MessageBus"]

@@ -1,0 +1,184 @@
+"""Kairos developer API (paper Listing 1): ``BaseAgent`` + ``Workflow``.
+
+Agents subclass :class:`BaseAgent`, override ``_run_impl`` and call
+``self.generate(...)`` to hit the shared LLM service — the call blocks
+(the paper's multi-threaded architecture) while the driver loop runs the
+load balancer and engine iterations.  System identifiers are injected and
+propagated transparently through the message bus.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.agents.messaging import Headers, MessageBus
+from repro.core import (
+    InstanceModel,
+    KairosScheduler,
+    LoadBalancer,
+    Orchestrator,
+    TimeSlotDispatcher,
+)
+from repro.core.orchestrator import HardwareProfile
+from repro.models import build_model
+from repro.serving import LLMEngine, PagedModelRunner
+from repro.serving.request import CompletionRecord, Request
+
+
+class BaseAgent:
+    """Subclass and override ``_run_impl(input_data, metadata)``; return
+    ``(output_payload, next_agent_name_or_None)``."""
+
+    def __init__(self, name: str, workflow: "Workflow"):
+        self.name = name
+        self.workflow = workflow
+
+    # -- LLM access (Listing 1: ``self.generate``) ---------------------------
+    def generate(self, prompt_tokens, metadata: Headers, max_new_tokens: int = 16) -> List[int]:
+        return self.workflow._llm_call(self.name, prompt_tokens, metadata, max_new_tokens)
+
+    def encode_prompt(self, text: str, length: Optional[int] = None) -> np.ndarray:
+        """Deterministic synthetic tokenizer stand-in."""
+        rng = np.random.default_rng(abs(hash(text)) & 0x7FFFFFFF)
+        n = length or max(4, len(text) // 4)
+        return rng.integers(0, self.workflow.vocab_size, n).astype(np.int32)
+
+    def _run_impl(self, input_data: dict, metadata: Headers) -> Tuple[dict, Optional[str]]:
+        raise NotImplementedError
+
+
+class Workflow:
+    """Define engines + agents, then ``run(...)`` user tasks through the
+    Kairos load balancer over real paged-KV engine instances."""
+
+    def __init__(self, app_name: str = "app", n_instances: int = 1,
+                 num_blocks: int = 128, block_size: int = 8, max_batch: int = 4):
+        self.app_name = app_name
+        self.bus = MessageBus()
+        self.orch = Orchestrator(hardware=HardwareProfile(
+            decode_tok_per_s=20.0, kv_capacity_tokens=num_blocks * block_size))
+        self.agents: Dict[str, BaseAgent] = {}
+        self.engines: List[LLMEngine] = []
+        self._engine_cfg = (n_instances, num_blocks, block_size, max_batch)
+        self.vocab_size = 512
+        self._submissions: "queue.Queue[Tuple[Request, threading.Event, list]]" = queue.Queue()
+        self._pending: Dict[int, Tuple[Request, threading.Event, list]] = {}
+        self._threads: List[threading.Thread] = []
+        self._results: Dict[str, dict] = {}
+        self._outstanding = 0
+        self._lock = threading.Lock()
+        self.balancer: Optional[LoadBalancer] = None
+
+    # ------------------------------------------------------------------ setup
+    def add_engine(self, name: str, model: str = "qwen3-1.7b", seed: int = 0):
+        """Instantiate ``n_instances`` engines serving the REDUCED variant of
+        the named architecture (CPU container; full configs go through the
+        dry-run)."""
+        from repro.configs import get_config
+        cfg = get_config(model).reduced()
+        self.vocab_size = cfg.vocab_size
+        m = build_model(cfg)
+        params = m.init_params(jax.random.PRNGKey(seed))
+        n, blocks, bs, mb = self._engine_cfg
+        for i in range(n):
+            runner = PagedModelRunner(m, params, num_blocks=blocks,
+                                      block_size=bs, max_batch=mb)
+            self.engines.append(LLMEngine(runner, instance_id=i, max_batch=mb))
+        models = [InstanceModel(i, blocks * bs) for i in range(n)]
+        probe = lambda iid, req: (
+            len(self.engines[iid].running) + len(self.engines[iid].waiting)
+            < self.engines[iid].max_batch)
+        self.balancer = LoadBalancer(
+            KairosScheduler(self.orch.priority_score),
+            TimeSlotDispatcher(models, admit_probe=probe),
+            self.orch,
+            lambda iid, req: self.engines[iid].submit(req))
+
+    def add_agent(self, agent_name: str, agent_class, use_model: str = ""):
+        agent = agent_class(agent_name, self)
+        self.agents[agent_name] = agent
+        self.bus.subscribe(agent_name, self._on_message)
+
+    # ------------------------------------------------------------------ llm
+    def _llm_call(self, agent_name: str, prompt_tokens, metadata: Headers,
+                  max_new_tokens: int) -> List[int]:
+        req = Request(
+            agent_name=agent_name, msg_id=metadata.msg_id,
+            upstream_name=metadata.upstream_name, app_name=metadata.app_name,
+            prompt_len=len(prompt_tokens), prompt_tokens=np.asarray(prompt_tokens),
+            max_new_tokens=max_new_tokens,
+            arrival_time=time.monotonic(), app_start_time=metadata.app_start_time)
+        ev = threading.Event()
+        box: list = []
+        self._submissions.put((req, ev, box))
+        ev.wait(timeout=300)
+        return box[0] if box else []
+
+    # ------------------------------------------------------------------ agents
+    def _on_message(self, msg):
+        agent = self.agents[msg.topic]
+
+        def work():
+            out, nxt = agent._run_impl(msg.payload, msg.headers)
+            if nxt is not None:
+                self.bus.publish(nxt, out, Headers(
+                    msg_id=msg.headers.msg_id, app_name=msg.headers.app_name,
+                    upstream_name=agent.name,
+                    app_start_time=msg.headers.app_start_time))
+            else:
+                with self._lock:
+                    self._results[msg.headers.msg_id] = out
+                    self._outstanding -= 1
+                self.orch.on_workflow_complete(msg.headers.msg_id)
+
+        t = threading.Thread(target=work, daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    # ------------------------------------------------------------------ run
+    def submit_task(self, entry_agent: str, input_data: dict) -> str:
+        msg_id = self.bus.new_msg_id(self.app_name)
+        with self._lock:
+            self._outstanding += 1
+        self.bus.publish(entry_agent, input_data, Headers(
+            msg_id=msg_id, app_name=self.app_name, upstream_name=None,
+            app_start_time=time.monotonic()))
+        return msg_id
+
+    def run(self, timeout: float = 300.0) -> Dict[str, dict]:
+        """Driver loop: drain bus -> agent threads -> balancer -> engines."""
+        assert self.balancer is not None, "call add_engine first"
+        t_end = time.monotonic() + timeout
+        while time.monotonic() < t_end:
+            with self._lock:
+                if self._outstanding == 0 and self._submissions.empty():
+                    break
+            self.bus.drain()
+            while not self._submissions.empty():
+                req, ev, box = self._submissions.get()
+                self._pending[req.req_id] = (req, ev, box)
+                self.balancer.enqueue(req)
+            self.balancer.tick(time.monotonic())
+            idle = True
+            for eng in self.engines:
+                finished = eng.step()
+                idle = idle and not eng.running and not eng.waiting
+                for r in finished:
+                    self.orch.on_completion(CompletionRecord(
+                        agent_name=r.agent_name, msg_id=r.msg_id,
+                        upstream_name=r.upstream_name, app_name=r.app_name,
+                        start_time=r.arrival_time, end_time=r.finish_time,
+                        prompt_len=r.prompt_len, output_len=r.output_len,
+                        exec_start_time=r.exec_start_time))
+                    self.balancer.dispatcher.on_finish(r.instance_id, r.req_id)
+                    _, ev, box = self._pending.pop(r.req_id)
+                    box.append(list(r.output_tokens))
+                    ev.set()
+            if idle:
+                time.sleep(0.002)
+        return dict(self._results)

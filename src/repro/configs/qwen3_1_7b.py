@@ -1,0 +1,20 @@
+"""Qwen3-1.7B — [dense] 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936, qk_norm, head_dim=128. [hf:Qwen/Qwen3-8B family]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=6144,
+    vocab_size=151_936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen3-8B",
+)

@@ -1,0 +1,36 @@
+# Kairos core — the paper's primary contribution: workflow orchestrator,
+# workflow-aware priority scheduler, memory-aware time-slot dispatcher.
+from repro.core.balancer import LoadBalancer
+from repro.core.dispatcher import (
+    BestFitOracleDispatcher,
+    InstanceModel,
+    RoundRobinDispatcher,
+    TimeSlotDispatcher,
+)
+from repro.core.distributions import (
+    ConvergenceTracker,
+    DistributionProfiler,
+    EmpiricalDistribution,
+    wasserstein_1d,
+)
+from repro.core.memory_model import MemoryRamp, make_ramp
+from repro.core.orchestrator import ArchMemoryTraits, HardwareProfile, Orchestrator
+from repro.core.priority import PriorityTable, agent_priorities, classical_mds_1d
+from repro.core.scheduler import (
+    FCFSScheduler,
+    KairosScheduler,
+    OracleScheduler,
+    SchedulerPolicy,
+    TopoScheduler,
+)
+from repro.core.workflow import WorkflowAnalyzer, WorkflowGraph
+
+__all__ = [
+    "LoadBalancer", "BestFitOracleDispatcher", "InstanceModel",
+    "RoundRobinDispatcher", "TimeSlotDispatcher", "ConvergenceTracker",
+    "DistributionProfiler", "EmpiricalDistribution", "wasserstein_1d",
+    "MemoryRamp", "make_ramp", "ArchMemoryTraits", "HardwareProfile",
+    "Orchestrator", "PriorityTable", "agent_priorities", "classical_mds_1d",
+    "FCFSScheduler", "KairosScheduler", "OracleScheduler", "SchedulerPolicy",
+    "TopoScheduler", "WorkflowAnalyzer", "WorkflowGraph",
+]

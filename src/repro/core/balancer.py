@@ -1,0 +1,69 @@
+"""Load balancer: the queue where scheduling policy × dispatch policy meet
+(Kairos Fig. 10 ①–③).  Shared verbatim by the real-engine harness and the
+discrete-event simulator — only the instance objects differ.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.core.dispatcher import TimeSlotDispatcher
+from repro.core.orchestrator import Orchestrator
+from repro.core.scheduler import SchedulerPolicy
+from repro.serving.request import Request, RequestState
+
+
+class LoadBalancer:
+    def __init__(self, scheduler: SchedulerPolicy, dispatcher,
+                 orchestrator: Orchestrator,
+                 submit_fn: Callable[[int, Request], None],
+                 max_dispatch_per_tick: int = 64,
+                 strict_head: bool = False):
+        self.scheduler = scheduler
+        self.dispatcher = dispatcher
+        self.orch = orchestrator
+        self.submit_fn = submit_fn
+        self.queue: List[Request] = []
+        self.max_dispatch_per_tick = max_dispatch_per_tick
+        # strict_head: FCFS/vLLM semantics — the head of the ordered queue
+        # blocks everything behind it (Parrot/Ayo).  Kairos instead skips
+        # undispatchable requests ("remains in the queue awaiting the next
+        # scheduling round", §6), which avoids dispatch-level HoL.
+        self.strict_head = strict_head
+        self.n_scheduled = 0
+
+    def enqueue(self, req: Request):
+        req.state = RequestState.QUEUED
+        self.queue.append(req)
+
+    def tick(self, now: float):
+        """One scheduling round: order queue by policy (§5), dispatch in
+        order with memory awareness (§6).  Requests the dispatcher rejects
+        stay queued for the next round."""
+        if not self.queue:
+            return
+        ordered = self.scheduler.order(self.queue)
+        dispatched = []
+        for req in ordered[: self.max_dispatch_per_tick * 4]:
+            ramp = self.orch.memory_ramp(req, now)
+            # starvation valve: a request stuck for a long time is force-
+            # placed on the min-peak instance (engine preemption absorbs it)
+            force = (now - req.arrival_time) > 30.0
+            try:
+                iid = self.dispatcher.dispatch(req, ramp, now, force=force)
+            except TypeError:
+                iid = self.dispatcher.dispatch(req, ramp, now)
+            if iid is None:
+                if self.strict_head:
+                    break
+                continue
+            self.submit_fn(iid, req)
+            dispatched.append(req)
+            self.n_scheduled += 1
+            if len(dispatched) >= self.max_dispatch_per_tick:
+                break
+        for req in dispatched:
+            self.queue.remove(req)
+
+    @property
+    def queued(self) -> int:
+        return len(self.queue)

@@ -1,0 +1,85 @@
+"""Workflow Orchestrator (§4): collects execution info online, updates the
+workflow analyzer and the distribution profiler, and serves the derived
+signals (agent priorities, expected execution times, memory ramps) to the
+scheduler and dispatcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core.distributions import DistributionProfiler
+from repro.core.memory_model import MemoryRamp, make_ramp
+from repro.core.priority import PriorityTable
+from repro.core.workflow import WorkflowAnalyzer
+from repro.serving.request import CompletionRecord, Request
+
+
+@dataclasses.dataclass
+class HardwareProfile:
+    """Prior profiling constants (paper: A40; here: v5e-class, DESIGN.md §3)."""
+    decode_tok_per_s: float = 30.0        # per-request decode speed (Eq.1 `k`)
+    kv_capacity_tokens: int = 8192        # per instance
+
+
+@dataclasses.dataclass
+class ArchMemoryTraits:
+    """Architecture adaptation of Eq. 1 (DESIGN.md §4)."""
+    kv_ratio: float = 1.0                 # fraction of layers with KV growth
+    state_tokens: float = 0.0             # constant recurrent state (token-equiv)
+
+
+class Orchestrator:
+    def __init__(self, hardware: Optional[HardwareProfile] = None,
+                 arch_traits: Optional[ArchMemoryTraits] = None,
+                 priority_refresh: int = 64):
+        self.hw = hardware or HardwareProfile()
+        self.traits = arch_traits or ArchMemoryTraits()
+        self.analyzer = WorkflowAnalyzer()
+        self.profiler = DistributionProfiler()
+        self.priorities = PriorityTable(interval=priority_refresh)
+
+    # ------------------------------------------------------------------ intake
+    def on_completion(self, rec: CompletionRecord):
+        self.analyzer.add_record(rec)
+        # single-request distribution uses pure execution latency (Eq. 2)
+        self.profiler.record(rec.agent_name, rec.exec_latency, rec.output_len)
+        self.priorities.tick_completion()
+
+    def on_workflow_complete(self, msg_id: str):
+        self.analyzer.finalize_trace(msg_id)
+        self.priorities.maybe_refresh(
+            {k: v.samples for k, v in self.analyzer.remaining.items()})
+
+    def refresh_priorities(self):
+        self.priorities.maybe_refresh(
+            {k: v.samples for k, v in self.analyzer.remaining.items()}, force=True)
+
+    # ------------------------------------------------------------------ queries
+    def priority_score(self, app: str, agent: str) -> float:
+        s = self.priorities.score(app, agent)
+        if s == float("inf"):
+            # cold start: fall back to single-request expected latency
+            return 1e6 + self.profiler.expected_exec_time(agent, default=1.0)
+        return s
+
+    def remaining_stages(self, app: str, agent: str) -> int:
+        return self.analyzer.remaining_stages(app, agent)
+
+    def expected_exec_time(self, agent: str) -> float:
+        return self.profiler.expected_exec_time(agent)
+
+    def memory_ramp(self, req: Request, now: float) -> MemoryRamp:
+        # conservative reservation: P75 of the agent's exec-latency samples
+        # (the paper's mode estimate under-reserves for heavy-tailed agents;
+        # EXPERIMENTS.md §Perf records this beyond-paper refinement)
+        d = self.profiler.latency.get(req.agent_name)
+        t = d.percentile(75) if d and len(d) >= 8 else self.expected_exec_time(req.agent_name)
+        return make_ramp(
+            prompt_len=req.prompt_len,
+            expected_exec_time=t,
+            decode_tok_per_s=self.hw.decode_tok_per_s,
+            t_start=now,
+            kv_ratio=self.traits.kv_ratio,
+            state_tokens=self.traits.state_tokens,
+        )

@@ -1,0 +1,30 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU the Pallas path compiles natively; in this CPU container the kernel
+body executes under ``interpret=True``.  ``backend="ref"`` selects the
+pure-jnp oracle (used by the serving engine on CPU for speed — interpret
+mode is a correctness tool, not fast).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.paged_attention import paged_attention as _paged_pallas
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def paged_attention(q, k_pool, v_pool, block_tables, context_lens, backend: str = "ref"):
+    """Decode attention over a paged KV pool.  See kernels/ref.py for shapes."""
+    if backend == "pallas":
+        return _paged_pallas(q, k_pool, v_pool, block_tables, context_lens)
+    if backend == "interpret":
+        return _paged_pallas(q, k_pool, v_pool, block_tables, context_lens, interpret=True)
+    return _ref.paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens)

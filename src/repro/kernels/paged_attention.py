@@ -1,0 +1,107 @@
+"""Pallas TPU paged-attention decode kernel (flash-decoding style).
+
+The serving engine's hot loop: one query token per sequence attends to a
+paged KV cache (vLLM-style block pool).  TPU adaptation (DESIGN.md §3):
+instead of CUDA warp-level gathers, the block table is *scalar-prefetched*
+into SMEM and fed to the BlockSpec index maps, so Pallas pipelines the
+HBM->VMEM page copies double-buffered while the MXU reduces the previous
+page.  Accumulation is the standard running-max/denominator (flash)
+reduction in fp32 VMEM scratch.
+
+Grid: (B, KV_heads, num_pages).  Page k/v tiles are (block_size, head_dim)
+with head_dim padded/aligned to 128 by the caller (all assigned configs
+have head_dim in {64, 112, 128}; 112 is padded by Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(block_tables_ref,   # (B, nb) SMEM (scalar prefetch)
+                       context_lens_ref,   # (B,)   SMEM (scalar prefetch)
+                       q_ref,              # (1, 1, G, hd) VMEM
+                       k_ref,              # (1, bs, 1, hd) VMEM (gathered page)
+                       v_ref,              # (1, bs, 1, hd) VMEM
+                       o_ref,              # (1, 1, G, hd) VMEM
+                       acc_ref,            # (G, hd) f32 scratch
+                       m_ref,              # (G, 1) f32 scratch
+                       l_ref,              # (G, 1) f32 scratch
+                       *, bs: int, nb: int, scale: float):
+    b = pl.program_id(0)
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cl = context_lens_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)                      # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (bs, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (G, bs)
+    token_idx = n * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    scores = jnp.where(token_idx < cl, scores, NEG_INF)
+
+    m_prev = m_ref[...]                                      # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                              # (G, bs)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(n == nb - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jnp.ndarray,
+                    k_pool: jnp.ndarray,
+                    v_pool: jnp.ndarray,
+                    block_tables: jnp.ndarray,
+                    context_lens: jnp.ndarray,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q (B,KV,G,hd); pools (N, bs, KV, hd); tables (B, nb); lens (B,)."""
+    b, kv, g, hd = q.shape
+    _, bs, _, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_paged_attn_kernel, bs=bs, nb=nb, scale=scale)
+    grid = (b, kv, nb)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda bb, h, n, bt, cl: (bb, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd), lambda bb, h, n, bt, cl: (bt[bb, n], 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd), lambda bb, h, n, bt, cl: (bt[bb, n], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd), lambda bb, h, n, bt, cl: (bb, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, hd), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, q, k_pool, v_pool)

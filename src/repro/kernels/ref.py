@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every kernel test sweeps shapes and
+dtypes and asserts allclose against these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jnp.ndarray,
+                        k_pool: jnp.ndarray,
+                        v_pool: jnp.ndarray,
+                        block_tables: jnp.ndarray,
+                        context_lens: jnp.ndarray) -> jnp.ndarray:
+    """Decode attention over a paged KV cache.
+
+    q:            (B, KV, G, hd)   — grouped queries (H = KV*G)
+    k_pool/v_pool:(N_blocks, bs, KV, hd)
+    block_tables: (B, max_blocks)  int32 physical block ids
+    context_lens: (B,)             int32 valid tokens per sequence
+    returns:      (B, KV, G, hd)
+    """
+    b, kv, g, hd = q.shape
+    bs = k_pool.shape[1]
+    max_blocks = block_tables.shape[1]
+    s_max = max_blocks * bs
+
+    # gather pages -> (B, S_max, KV, hd)
+    k = k_pool[block_tables].reshape(b, s_max, kv, hd)
+    v = v_pool[block_tables].reshape(b, s_max, kv, hd)
+
+    scores = jnp.einsum("bkgd,btkd->bkgt", q, k).astype(jnp.float32) / (hd ** 0.5)
+    valid = jnp.arange(s_max)[None, :] < context_lens[:, None]          # (B, S)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def chunked_prefill_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                                  window: int | None = None) -> jnp.ndarray:
+    """Causal (optionally sliding-window) attention oracle.
+
+    q (B,S,KV,G,hd); k/v (B,S,KV,hd) -> (B,S,KV,G,hd)
+    """
+    s = q.shape[1]
+    hd = q.shape[-1]
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) / (hd ** 0.5)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v).astype(q.dtype)

@@ -1,0 +1,312 @@
+"""Multi-pod dry-run: prove the distribution config lowers + compiles for
+every (architecture × input shape × mesh) combination, and extract the
+memory / FLOP / collective numbers that feed the roofline analysis.
+
+The two os.environ lines below MUST run before ANY other import (jax locks
+the device count on first init).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape decode_32k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun.json
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ModelConfig, ShapeConfig, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    dp_axes,
+    param_shardings,
+    should_fsdp,
+)
+from repro.training.optimizer import make_train_step
+
+ARCHS_DEFAULT = list(__import__("repro.configs", fromlist=["ARCH_IDS"]).ARCH_IDS)
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_SHAPE_RE = re.compile(r"(f32|f16|bf16|f64|s32|u32|s8|u8|pred|s16|u16)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+          "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def enc_len_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if shape.kind in ("train", "prefill"):
+        return shape.seq_len // 2
+    return min(4096, shape.seq_len // 2)
+
+
+def dec_len_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if cfg.is_encdec and shape.kind in ("train", "prefill"):
+        return shape.seq_len // 2
+    return shape.seq_len
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    b = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        s = dec_len_for(cfg, shape)
+        spec = {"tokens": sds((b, s), jnp.int32), "labels": sds((b, s), jnp.int32)}
+        if cfg.is_encdec:
+            spec["frames"] = sds((b, enc_len_for(cfg, shape), cfg.d_model), jnp.bfloat16)
+        return spec
+    if shape.kind == "prefill":
+        s = dec_len_for(cfg, shape)
+        spec = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.is_encdec:
+            spec["frames"] = sds((b, enc_len_for(cfg, shape), cfg.d_model), jnp.bfloat16)
+        return spec
+    # decode: ONE new token against a cache of seq_len
+    return {"tokens": sds((b, 1), jnp.int32)}
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its body lines (post-SPMD HLO text)."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*\(.*\)\s*->.*\{", line) \
+            or re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->", line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = comps[cur]
+        elif line.startswith("}"):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def _trip_factors(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """Multiplier for each computation = product of enclosing while trip
+    counts (lax.scan layer stacks under-count otherwise)."""
+    # while edges: parent computation -> (body computation, trip count)
+    edges: Dict[str, List] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" not in ln:
+                continue
+            mb = re.search(r"body=%?([\w\.\-]+)", ln)
+            mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ln)
+            if mb:
+                edges.setdefault(name, []).append(
+                    (mb.group(1), int(mt.group(1)) if mt else 1))
+    factor = {name: 1 for name in comps}
+    roots = [n for n in comps if n == "__entry__" or n not in
+             {b for es in edges.values() for b, _ in es}]
+    seen = set()
+    stack = [(r, 1) for r in roots]
+    while stack:
+        name, f = stack.pop()
+        if name in seen and factor.get(name, 1) >= f:
+            continue
+        seen.add(name)
+        factor[name] = max(factor.get(name, 1), f)
+        for body, trip in edges.get(name, ()):
+            stack.append((body, f * trip))
+    return factor
+
+
+def _collective_bytes(hlo: str) -> Dict[str, int]:
+    """Per-device collective operand bytes, scaled by enclosing while-loop
+    trip counts (so per-layer collectives inside the layer scan count
+    num_layers times)."""
+    comps = _split_computations(hlo)
+    factor = _trip_factors(comps)
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    for cname, lines in comps.items():
+        f = factor.get(cname, 1)
+        for stripped in lines:
+            m = re.search(r"=\s*\(?([a-z0-9\[\],{}() ]+?)\)?\s+([a-z\-]+)\(", stripped)
+            if not m:
+                continue
+            op = m.group(2)
+            opn = op.replace("-start", "").replace("-done", "")
+            if opn not in COLLECTIVE_OPS or op.endswith("-done"):
+                continue
+            nbytes = 0
+            for dt, dims in _SHAPE_RE.findall(m.group(1)):
+                n = 1
+                if dims:
+                    for d in dims.split(","):
+                        n *= int(d)
+                nbytes += n * _BYTES[dt]
+            out[opn] += nbytes * f
+    return out
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def build_step(arch: str, shape_name: str, mesh):
+    """Returns (step_fn, example_inputs (abstract), in_shardings)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    fsdp = should_fsdp(cfg, shape.kind)
+    specs = input_specs(arch, shape_name)
+    bspec = batch_pspec(shape, mesh)
+    ns = lambda p: NamedSharding(mesh, p)
+    # pin (B, S, d) activations at every layer boundary (see model.py)
+    model.act_sharding = ns(P(*bspec, None))
+
+    if shape.kind == "train":
+        opt = "adafactor" if cfg.param_count() > 100e9 else "adam"
+        init_state, train_step = make_train_step(model, opt)
+        state_shape = jax.eval_shape(init_state, key)
+        state_sh = param_shardings(state_shape, cfg, mesh, fsdp=fsdp)
+        batch_sh = {k: ns(bspec) if v.ndim == 2 else ns(P(*bspec, None))
+                    for k, v in specs.items()}
+        fn = jax.jit(train_step, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+        return fn, (state_shape, specs), cfg
+
+    params_shape = jax.eval_shape(model.init_params, key)
+    params_sh = param_shardings(params_shape, cfg, mesh, fsdp=fsdp)
+
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            def prefill_step(params, tokens, frames):
+                return model.prefill(params, tokens, frames)
+            in_sh = (params_sh, ns(bspec), ns(P(*bspec, None)))
+            args = (params_shape, specs["tokens"], specs["frames"])
+        else:
+            def prefill_step(params, tokens):
+                return model.prefill(params, tokens)
+            in_sh = (params_sh, ns(bspec))
+            args = (params_shape, specs["tokens"])
+        fn = jax.jit(prefill_step, in_shardings=in_sh)
+        return fn, args, cfg
+
+    # decode (serve_step): one token, full-context cache
+    b = shape.global_batch
+    s = dec_len_for(cfg, shape)
+    if cfg.is_encdec:
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(b, s, enc_len_for(cfg, shape)))
+    else:
+        cache_shape = jax.eval_shape(lambda: model.init_cache(b, s))
+    cache_sh = {k: ns(p) for k, p in
+                cache_pspecs(cfg, shape, mesh, cache_shape).items()}
+    # decoding starts at position s-1 (cache holds s-1 tokens of context)
+    def serve_step(params, cache, tokens):
+        cache = dict(cache, pos=jnp.asarray(s - 1, jnp.int32))
+        return model.decode_step(params, cache, tokens)
+
+    fn = jax.jit(serve_step, in_shardings=(params_sh, cache_sh, ns(bspec)),
+                 donate_argnums=(1,))
+    return fn, (params_shape, cache_shape, specs["tokens"]), cfg
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               with_hlo: bool = True) -> Dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "n_devices": mesh.size}
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "skipped (sub-quadratic required, see DESIGN.md §4)"
+        rec["elapsed_s"] = 0.0
+        return rec
+    try:
+        with mesh:
+            fn, args, cfg = build_step(arch, shape_name, mesh)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+            try:
+                mem = compiled.memory_analysis()
+                rec["memory"] = {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                    "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+                }
+            except Exception as e:  # CPU backend may not support it
+                rec["memory"] = {"error": str(e)}
+            try:
+                ca = compiled.cost_analysis()
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0]
+                rec["cost"] = {k: float(v) for k, v in ca.items()
+                               if isinstance(v, (int, float)) and
+                               k in ("flops", "bytes accessed", "transcendentals",
+                                     "optimal_seconds")}
+            except Exception as e:
+                rec["cost"] = {"error": str(e)}
+            if with_hlo:
+                hlo = compiled.as_text()
+                rec["collectives"] = _collective_bytes(hlo)
+                rec["hlo_lines"] = hlo.count("\n")
+            rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = f"FAILED: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = args.arch or (ARCHS_DEFAULT if args.all else ["llama3.2-3b"])
+    shapes = args.shape or (list(INPUT_SHAPES) if args.all else ["decode_32k"])
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = dryrun_one(arch, shape, mp)
+                records.append(rec)
+                mem = rec.get("memory", {}) or {}
+                peak = mem.get("peak_bytes")
+                peak_s = f"{peak/2**30:.2f}GiB/dev" if peak else "n/a"
+                flops = (rec.get("cost", {}) or {}).get("flops")
+                fl_s = f"{flops:.3g}F/dev" if flops else ""
+                print(f"[{rec['status'][:40]:40s}] {arch:22s} {shape:12s} "
+                      f"{rec['mesh']:8s} {peak_s:14s} {fl_s} ({rec['elapsed_s']}s)",
+                      flush=True)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    n_fail = sum(1 for r in records if r["status"].startswith("FAILED"))
+    print(f"\n{len(records) - n_fail}/{len(records)} combinations compiled")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh definitions.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Production target: TPU v5e, 16x16 = 256 chips
+per pod; the multi-pod mesh adds a leading "pod" axis (2 pods = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Degenerate mesh on the locally available devices (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -1,0 +1,3 @@
+from repro.models.model import EncDecModel, LanguageModel, build_model
+
+__all__ = ["EncDecModel", "LanguageModel", "build_model"]

@@ -1,0 +1,206 @@
+"""GQA attention: training/prefill (optionally query-chunked for long S,
+sliding-window masks) and single-token decode against a KV cache.
+
+Conventions: activations (B, S, d); q/k/v (B, S, H, hd); caches
+(2, B, Smax, n_kv, hd) per layer (stacked on a leading layer dim by the
+model).  All softmax math in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm, rope_at
+
+NEG_INF = -1e30
+LOCAL_ROPE_THETA = 10_000.0  # gemma3: local layers use 10k, global layers cfg.rope_theta
+
+
+def _dual_rope(positions: jnp.ndarray, hd: int, cfg: ModelConfig,
+               is_global: Optional[jnp.ndarray], rope_theta: Optional[float]):
+    """sin/cos; when ``is_global`` is traced and the arch mixes local/global
+    layers, select between the local (10k) and global (cfg.rope_theta) tables."""
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    if is_global is None or cfg.global_attn_every == 0:
+        return rope_at(positions, hd, theta)
+    sg, cg = rope_at(positions, hd, theta)
+    sl, cl = rope_at(positions, hd, LOCAL_ROPE_THETA)
+    return jnp.where(is_global, sg, sl), jnp.where(is_global, cg, cl)
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d, h * hd, dtype),
+        "wk": dense_init(k2, d, kv * hd, dtype),
+        "wv": dense_init(k3, d, kv * hd, dtype),
+        "wo": dense_init(k4, h * hd, d, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p: dict, xq: jnp.ndarray, xkv: jnp.ndarray, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", xq, p["wq"]).reshape(*xq.shape[:2], cfg.num_heads, hd)
+    k = jnp.einsum("bsd,de->bse", xkv, p["wk"]).reshape(*xkv.shape[:2], cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", xkv, p["wv"]).reshape(*xkv.shape[:2], cfg.num_kv_heads, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q (B,Sq,H,hd), k (B,Sk,KV,hd) -> scores (B, KV, G, Sq, Sk) fp32."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    return s / (hd ** 0.5)
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """probs (B,KV,G,Sq,Sk), v (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    b, kvh, g, sq, _ = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, kvh * g, v.shape[-1])
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, window: Optional[int],
+               k_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Additive bias (…, Sq, Sk): causal (+ sliding window, + validity)."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        causal &= (q_pos[:, None] - k_pos[None, :]) < window
+    bias = jnp.where(causal, 0.0, NEG_INF)
+    if k_valid is not None:
+        bias = jnp.where(k_valid[None, :], bias, NEG_INF)
+    return bias
+
+
+def causal_attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                     window: Optional[int] = None,
+                     is_global: Optional[jnp.ndarray] = None,
+                     positions: Optional[jnp.ndarray] = None,
+                     rope_theta: Optional[float] = None,
+                     q_chunk: int = 1024,
+                     causal: bool = True,
+                     return_kv: bool = False):
+    """Full-sequence causal attention (train / prefill).
+
+    ``is_global`` (traced bool, for scan-uniform layer stacks): when given
+    and False, the per-arch sliding window applies; when True, full causal.
+    Query-chunked via lax.scan when S > q_chunk to bound the score
+    materialization at (B,H,q_chunk,S).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    sin, cos = _dual_rope(positions, cfg.resolved_head_dim, cfg, is_global, rope_theta)
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    win = cfg.sliding_window if window is None else window
+
+    def attend(q_blk, qpos_blk):
+        scores = _gqa_scores(q_blk, k)  # (B,KV,G,sq,S)
+        if not causal:
+            probs = jax.nn.softmax(scores, axis=-1)
+            return _gqa_out(probs, v)
+        bias_local = _mask_bias(qpos_blk, positions, win)
+        bias_full = _mask_bias(qpos_blk, positions, None)
+        if is_global is None or win is None:
+            bias = bias_local if win is not None else bias_full
+        else:
+            bias = jnp.where(is_global, bias_full, bias_local)
+        probs = jax.nn.softmax(scores + bias, axis=-1)
+        return _gqa_out(probs, v)
+
+    if s > q_chunk and s % q_chunk == 0:
+        nq = s // q_chunk
+        qs = q.reshape(b, nq, q_chunk, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+        ps = positions.reshape(nq, q_chunk)
+
+        def body(_, xs):
+            q_blk, qpos_blk = xs
+            return None, attend(q_blk, qpos_blk)
+
+        _, outs = jax.lax.scan(body, None, (qs, ps))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, cfg.num_heads, -1)
+    else:
+        out = attend(q, positions)
+
+    o = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
+    if return_kv:
+        return o, (k, v)
+    return o
+
+
+def decode_attention(p: dict, x: jnp.ndarray, cache_kv: jnp.ndarray,
+                     pos: jnp.ndarray, cfg: ModelConfig, *,
+                     window: Optional[int] = None,
+                     is_global: Optional[jnp.ndarray] = None,
+                     rope_theta: Optional[float] = None):
+    """One-token decode. x (B,1,d); cache_kv (2,B,Smax,KV,hd); pos scalar =
+    index where the new token's K/V is written (number of tokens already
+    in the cache).  Returns (out (B,1,d), updated cache_kv).
+    """
+    b = x.shape[0]
+    smax = cache_kv.shape[2]
+    sin, cos = _dual_rope(pos[None], cfg.resolved_head_dim, cfg, is_global, rope_theta)
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    # write new kv at slot `pos`
+    cache_k = jax.lax.dynamic_update_slice(cache_kv[0], k.astype(cache_kv.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_kv[1], v.astype(cache_kv.dtype), (0, pos, 0, 0))
+    k_pos = jnp.arange(smax)
+    valid = k_pos <= pos
+    scores = _gqa_scores(q, cache_k)  # (B,KV,G,1,Smax)
+    win = cfg.sliding_window if window is None else window
+    dist = pos - k_pos
+    in_win = (dist < win) if win is not None else jnp.ones_like(valid)
+    if is_global is not None and win is not None:
+        keep = valid & (in_win | is_global)
+    elif win is not None:
+        keep = valid & in_win
+    else:
+        keep = valid
+    bias = jnp.where(keep, 0.0, NEG_INF)[None, None, None, None, :]
+    probs = jax.nn.softmax(scores + bias, axis=-1)
+    out = _gqa_out(probs, cache_v).reshape(b, 1, -1)
+    o = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return o, jnp.stack([cache_k, cache_v])
+
+
+def cross_attention(p: dict, x: jnp.ndarray, memory_kv: tuple[jnp.ndarray, jnp.ndarray],
+                    cfg: ModelConfig, memory_valid: Optional[jnp.ndarray] = None):
+    """Decoder->encoder cross attention; memory_kv precomputed (K, V)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k, v = memory_kv
+    scores = _gqa_scores(q, k)
+    if memory_valid is not None:
+        scores = jnp.where(memory_valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v).reshape(b, s, -1)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"])
+
+
+def project_memory_kv(p: dict, memory: jnp.ndarray, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    b, t, _ = memory.shape
+    k = jnp.einsum("btd,de->bte", memory, p["wk"]).reshape(b, t, cfg.num_kv_heads, hd)
+    v = jnp.einsum("btd,de->bte", memory, p["wv"]).reshape(b, t, cfg.num_kv_heads, hd)
+    return k, v

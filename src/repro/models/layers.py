@@ -1,0 +1,110 @@
+"""Shared neural-net building blocks (pure-functional, pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / (d_in ** 0.5)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def init_ffn(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_table(max_len: int, head_dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (sin, cos) tables of shape (max_len, head_dim // 2), fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = jnp.arange(max_len, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, head_dim); sin/cos: (S, head_dim//2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., :, None, :]  # (S, 1, half) broadcasting over heads
+    cos = cos[..., :, None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(dt)
+
+
+def rope_at(positions: jnp.ndarray, head_dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """sin/cos at explicit integer positions (any shape (...,))."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"embed": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def embed_tokens(params: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["embed"], ids, axis=0)
+
+
+def lm_logits(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, params["embed"])
+    return jnp.einsum("...d,dv->...v", x, params["lm_head"])
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray, mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token CE. logits (..., V) fp-any, targets int (...,).
+
+    The gold logit is extracted with a one-hot contraction rather than
+    ``take_along_axis``: with vocab-sharded logits GSPMD lowers the gather
+    by replicating the full fp32 logits across the mesh (measured as the
+    dominant collective on 34B-scale training, §Perf iteration 4); the
+    contraction form keeps the vocab dim sharded and reduces only (B, S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.einsum("...v,...v->...", logits, onehot)
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,596 @@
+"""Composable language models covering all assigned architecture families.
+
+A :class:`LanguageModel` is a stateless object built from a
+:class:`ModelConfig`; parameters and caches are explicit pytrees.  Layer
+stacks are *scanned* (stacked params, ``lax.scan``) so the HLO stays small
+at 62 layers and GSPMD partitions one layer body.  Mixed-kind stacks
+(Jamba's 7:1 mamba:attn with alternating MoE) scan over uniform 8-layer
+super-blocks.
+
+Public entry points (all pure):
+  init_params(key)                         -> params
+  loss(params, batch)                      -> (scalar, metrics)    # train
+  prefill(params, tokens[, frames])        -> (logits, cache)      # inference
+  decode_step(params, cache, tokens)       -> (logits, cache)      # one token
+  init_cache(batch, max_len)               -> zeroed cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (
+    embed_tokens,
+    init_embedding,
+    init_ffn,
+    lm_logits,
+    rms_norm,
+    softmax_cross_entropy,
+    swiglu,
+)
+from repro.models.moe import init_moe, moe_ffn
+
+# =============================================================================
+# per-layer param init
+# =============================================================================
+
+
+def _init_attn_layer(key, cfg: ModelConfig, dtype, ffn_kind: str) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attention(k1, cfg, dtype),
+    }
+    if ffn_kind == "moe":
+        p["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        p["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_rwkv_layer(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "tmix": ssm.init_rwkv_time_mix(k1, cfg, dtype),
+        "cmix": ssm.init_rwkv_channel_mix(k2, cfg, dtype),
+    }
+
+
+def _init_mamba_layer(key, cfg: ModelConfig, dtype, ffn_kind: str) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mamba": ssm.init_mamba(k1, cfg, dtype),
+    }
+    if ffn_kind == "moe":
+        p["moe"] = init_moe(k2, cfg, dtype)
+    else:
+        p["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_encoder_layer(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "ffn": init_ffn(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_decoder_xattn_layer(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln_x": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "xattn": attn.init_attention(k2, cfg, dtype, cross=True),
+        "ffn": init_ffn(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _stack_init(init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# =============================================================================
+# LanguageModel
+# =============================================================================
+
+
+class LanguageModel:
+    """Decoder-only LM (dense / MoE / VLM / RWKV / Jamba-hybrid)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        # Optional NamedSharding for (B, S, d) activations.  Constraining
+        # the scan carry at every layer boundary is essential under GSPMD:
+        # without it the partitioner replicated the carry across `data`
+        # and every shard computed the FULL global batch (measured
+        # f32[256,4096,1376] all-reduces on chameleon train, §Perf it. 4).
+        self.act_sharding = None
+        kinds = cfg.layer_kinds
+        self.uniform_kind = kinds[0] if len(set(kinds)) == 1 else None
+        if self.uniform_kind is None:
+            # Jamba-style periodic pattern; find the smallest repeating unit
+            self.block_period = next(
+                p for p in range(1, cfg.num_layers + 1)
+                if cfg.num_layers % p == 0 and kinds == kinds[:p] * (cfg.num_layers // p))
+            self.n_blocks = cfg.num_layers // self.block_period
+            self.block_kinds = kinds[: self.block_period]
+        moe_layers = set(cfg.moe_layer_indices())
+        self.ffn_kinds = tuple(
+            "moe" if i in moe_layers else "dense" for i in range(cfg.num_layers))
+        if self.uniform_kind is None:
+            # ffn pattern must repeat with the block (jamba: moe period 2 | block 8)
+            assert self.ffn_kinds == self.ffn_kinds[: self.block_period] * self.n_blocks
+
+    def _block_ffn_kind(self, i: int) -> str:
+        return self.ffn_kinds[i]
+
+    def _constrain(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.act_sharding is not None and x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, self.act_sharding)
+        return x
+
+    # -- flags ---------------------------------------------------------------
+    def _is_global_flags(self) -> Optional[jnp.ndarray]:
+        cfg = self.cfg
+        if cfg.global_attn_every:
+            return jnp.array(
+                [(i % cfg.global_attn_every) == (cfg.global_attn_every - 1)
+                 for i in range(cfg.num_layers)])
+        if cfg.sliding_window is not None:
+            return jnp.zeros((cfg.num_layers,), bool)
+        return None
+
+    # =========================================================================
+    # init
+    # =========================================================================
+    def init_params(self, key) -> dict:
+        cfg, dtype = self.cfg, self.dtype
+        k_emb, k_layers = jax.random.split(key)
+        params = init_embedding(k_emb, cfg, dtype)
+        params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if self.uniform_kind == "attn":
+            ffn_kind = self.ffn_kinds[0]
+            params["layers"] = _stack_init(
+                lambda k: _init_attn_layer(k, cfg, dtype, ffn_kind), k_layers, cfg.num_layers)
+        elif self.uniform_kind == "rwkv":
+            params["layers"] = _stack_init(
+                lambda k: _init_rwkv_layer(k, cfg, dtype), k_layers, cfg.num_layers)
+        else:  # jamba blocks
+            def init_block(k):
+                ks = jax.random.split(k, self.block_period)
+                md, mm = [], []
+                blk = {}
+                for i, kind in enumerate(self.block_kinds):
+                    fk = self._block_ffn_kind(i)
+                    if kind == "attn":
+                        blk["attn"] = _init_attn_layer(ks[i], cfg, dtype, fk)
+                    elif fk == "moe":
+                        mm.append(_init_mamba_layer(ks[i], cfg, dtype, fk))
+                    else:
+                        md.append(_init_mamba_layer(ks[i], cfg, dtype, fk))
+                if md:
+                    blk["mamba_dense"] = jax.tree.map(lambda *xs: jnp.stack(xs), *md)
+                if mm:
+                    blk["mamba_moe"] = jax.tree.map(lambda *xs: jnp.stack(xs), *mm)
+                return blk
+            params["layers"] = _stack_init(init_block, k_layers, self.n_blocks)
+        return params
+
+    # =========================================================================
+    # caches
+    # =========================================================================
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+        n_attn = len(cfg.attn_layer_indices)
+        if n_attn:
+            cache["kv"] = jnp.zeros(
+                (n_attn, 2, batch, max_len, cfg.num_kv_heads, hd), self.dtype)
+        kinds = cfg.layer_kinds
+        n_rwkv = sum(1 for k in kinds if k == "rwkv")
+        if n_rwkv:
+            h = cfg.d_model // cfg.rwkv_head_dim
+            cache["rwkv_state"] = jnp.zeros(
+                (n_rwkv, batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+            cache["rwkv_shift1"] = jnp.zeros((n_rwkv, batch, cfg.d_model), self.dtype)
+            cache["rwkv_shift2"] = jnp.zeros((n_rwkv, batch, cfg.d_model), self.dtype)
+        n_mamba = sum(1 for k in kinds if k == "mamba")
+        if n_mamba:
+            di = cfg.ssm_expand * cfg.d_model
+            cache["mamba_h"] = jnp.zeros((n_mamba, batch, di, cfg.ssm_state_dim), jnp.float32)
+            cache["mamba_conv"] = jnp.zeros(
+                (n_mamba, batch, cfg.ssm_conv_dim - 1, di), self.dtype)
+        return cache
+
+    # =========================================================================
+    # layer bodies (shared by train / prefill / decode)
+    # =========================================================================
+    def _attn_layer_fwd(self, lp, x, is_global, ffn_kind, mode):
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if mode == "prefill":
+            o, kv = attn.causal_attention(
+                lp["attn"], h, cfg, is_global=is_global, return_kv=True)
+        else:
+            o = attn.causal_attention(lp["attn"], h, cfg, is_global=is_global)
+            kv = None
+        x = x + o
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if ffn_kind == "moe":
+            f, aux = moe_ffn(lp["moe"], h2, cfg)
+        else:
+            f, aux = swiglu(h2, **lp["ffn"]), jnp.zeros((), jnp.float32)
+        return x + f, aux, kv
+
+    def _attn_layer_decode(self, lp, x, cache_kv, pos, is_global, ffn_kind):
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        o, new_kv = attn.decode_attention(lp["attn"], h, cache_kv, pos, cfg,
+                                          is_global=is_global)
+        x = x + o
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if ffn_kind == "moe":
+            f, _ = moe_ffn(lp["moe"], h2, cfg)
+        else:
+            f = swiglu(h2, **lp["ffn"])
+        return x + f, new_kv
+
+    def _rwkv_layer_fwd(self, lp, x, state, s1, s2, mode):
+        cfg = self.cfg
+        fn = ssm.rwkv_time_mix_step if mode == "decode" else ssm.rwkv_time_mix
+        o, new_state, new_s1 = fn(lp["tmix"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                  state, s1, cfg)
+        x = x + o
+        o2, new_s2 = ssm.rwkv_channel_mix(lp["cmix"], rms_norm(x, lp["ln2"], cfg.norm_eps), s2)
+        return x + o2, new_state, new_s1, new_s2
+
+    def _mamba_layer_fwd(self, lp, x, h_state, conv_state, ffn_kind, mode):
+        cfg = self.cfg
+        fn = ssm.mamba_step if mode == "decode" else ssm.mamba_forward
+        o, new_h, new_conv = fn(lp["mamba"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                h_state, conv_state, cfg)
+        x = x + o
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if ffn_kind == "moe":
+            f, aux = moe_ffn(lp["moe"], h2, cfg)
+        else:
+            f, aux = swiglu(h2, **lp["ffn"]), jnp.zeros((), jnp.float32)
+        return x + f, aux, new_h, new_conv
+
+    # =========================================================================
+    # full-sequence forward (train / prefill)
+    # =========================================================================
+    def _forward_seq(self, params, tokens, mode: str):
+        cfg = self.cfg
+        x = self._constrain(embed_tokens(params, tokens).astype(self.dtype))
+        b, s = tokens.shape
+        flags = self._is_global_flags()
+        aux_total = jnp.zeros((), jnp.float32)
+        cache = self.init_cache(b, s) if mode == "prefill" else None
+
+        if self.uniform_kind == "attn":
+            ffn_kind = self.ffn_kinds[0]
+
+            def body(carry, xs):
+                xx, aux = carry
+                lp, flag = xs
+                xx = self._constrain(xx)
+                xx, a, kv = self._attn_layer_fwd(lp, xx, flag, ffn_kind, mode)
+                return (xx, aux + a), (jnp.stack(kv) if kv is not None else jnp.zeros((), self.dtype))
+
+            if mode == "train":
+                body = jax.checkpoint(body)
+            xs = (params["layers"], flags if flags is not None
+                  else jnp.zeros((cfg.num_layers,), bool))
+            (x, aux_total), kvs = jax.lax.scan(body, (x, aux_total), xs)
+            if mode == "prefill":
+                cache["kv"] = kvs
+                cache["pos"] = jnp.asarray(s, jnp.int32)
+
+        elif self.uniform_kind == "rwkv":
+            h = cfg.d_model // cfg.rwkv_head_dim
+            st0 = jnp.zeros((b, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+            sh0 = jnp.zeros((b, cfg.d_model), self.dtype)
+
+            def body(carry, lp):
+                xx, aux = carry
+                xx = self._constrain(xx)
+                xx, st, sh1, sh2 = self._rwkv_layer_fwd(lp, xx, st0, sh0, sh0, mode)
+                return (xx, aux), (st, sh1.astype(self.dtype), sh2.astype(self.dtype))
+
+            if mode == "train":
+                body = jax.checkpoint(body)
+            (x, aux_total), (sts, sh1s, sh2s) = jax.lax.scan(body, (x, aux_total), params["layers"])
+            if mode == "prefill":
+                cache["rwkv_state"], cache["rwkv_shift1"], cache["rwkv_shift2"] = sts, sh1s, sh2s
+                cache["pos"] = jnp.asarray(s, jnp.int32)
+
+        else:  # jamba blocks
+            di = cfg.ssm_expand * cfg.d_model
+            h0 = jnp.zeros((b, di, cfg.ssm_state_dim), jnp.float32)
+            c0 = jnp.zeros((b, cfg.ssm_conv_dim - 1, di), self.dtype)
+
+            def block_body(carry, blk):
+                xx, aux = carry
+                xx = self._constrain(xx)
+                i_md = i_mm = 0
+                kvs, hs, convs = None, [], []
+                for i, kind in enumerate(self.block_kinds):
+                    fk = self._block_ffn_kind(i)
+                    if kind == "attn":
+                        xx, a, kv = self._attn_layer_fwd(blk["attn"], xx, None, fk, mode)
+                        kvs = kv
+                    else:
+                        group, idx = ("mamba_moe", i_mm) if fk == "moe" else ("mamba_dense", i_md)
+                        lp = jax.tree.map(lambda t: t[idx], blk[group])
+                        xx, a, nh, nc = self._mamba_layer_fwd(lp, xx, h0, c0, fk, mode)
+                        hs.append(nh)
+                        convs.append(nc)
+                        if fk == "moe":
+                            i_mm += 1
+                        else:
+                            i_md += 1
+                    aux = aux + a
+                out = (jnp.stack(kvs) if kvs is not None else jnp.zeros((), self.dtype),
+                       jnp.stack(hs), jnp.stack(convs))
+                return (xx, aux), out
+
+            if mode == "train":
+                block_body = jax.checkpoint(block_body)
+            (x, aux_total), (kvs, hs, convs) = jax.lax.scan(
+                block_body, (x, aux_total), params["layers"])
+            if mode == "prefill":
+                cache["kv"] = kvs
+                cache["mamba_h"] = hs.reshape(-1, *hs.shape[2:])
+                cache["mamba_conv"] = convs.reshape(-1, *convs.shape[2:])
+                cache["pos"] = jnp.asarray(s, jnp.int32)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux_total, cache
+
+    # =========================================================================
+    # public API
+    # =========================================================================
+    def loss(self, params, batch):
+        x, aux, _ = self._forward_seq(params, batch["tokens"], "train")
+        logits = lm_logits(params, x, self.cfg)
+        mask = batch.get("mask")
+        ce = softmax_cross_entropy(logits, batch["labels"], mask)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, tokens):
+        x, _, cache = self._forward_seq(params, tokens, "prefill")
+        logits = lm_logits(params, x[:, -1], self.cfg)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens (B,1) -> (logits (B,V), updated cache)."""
+        cfg = self.cfg
+        x = embed_tokens(params, tokens).astype(self.dtype)
+        pos = cache["pos"]
+        flags = self._is_global_flags()
+
+        if self.uniform_kind == "attn":
+            ffn_kind = self.ffn_kinds[0]
+
+            def body(xx, xs):
+                lp, kv_slice, flag = xs
+                xx = self._constrain(xx)
+                xx, new_kv = self._attn_layer_decode(lp, xx, kv_slice, pos, flag, ffn_kind)
+                return xx, new_kv
+
+            xs = (params["layers"], cache["kv"],
+                  flags if flags is not None else jnp.zeros((cfg.num_layers,), bool))
+            x, new_kvs = jax.lax.scan(body, x, xs)
+            new_cache = dict(cache, kv=new_kvs, pos=pos + 1)
+
+        elif self.uniform_kind == "rwkv":
+            def body(xx, xs):
+                lp, st, sh1, sh2 = xs
+                xx = self._constrain(xx)
+                xx, nst, ns1, ns2 = self._rwkv_layer_fwd(lp, xx, st, sh1, sh2, "decode")
+                return xx, (nst, ns1.astype(self.dtype), ns2.astype(self.dtype))
+
+            x, (sts, s1s, s2s) = jax.lax.scan(
+                body, x, (params["layers"], cache["rwkv_state"],
+                          cache["rwkv_shift1"], cache["rwkv_shift2"]))
+            new_cache = dict(cache, rwkv_state=sts, rwkv_shift1=s1s,
+                             rwkv_shift2=s2s, pos=pos + 1)
+
+        else:  # jamba
+            n_m = sum(1 for k in self.block_kinds if k != "attn")
+            hs_in = cache["mamba_h"].reshape(self.n_blocks, n_m, *cache["mamba_h"].shape[1:])
+            convs_in = cache["mamba_conv"].reshape(
+                self.n_blocks, n_m, *cache["mamba_conv"].shape[1:])
+
+            def block_body(xx, xs):
+                blk, kv_slice, hs, convs = xs
+                xx = self._constrain(xx)
+                i_md = i_mm = i_m = 0
+                new_kv, new_hs, new_convs = None, [], []
+                for i, kind in enumerate(self.block_kinds):
+                    fk = self._block_ffn_kind(i)
+                    if kind == "attn":
+                        xx, new_kv = self._attn_layer_decode(blk["attn"], xx, kv_slice, pos, None, fk)
+                    else:
+                        group, idx = ("mamba_moe", i_mm) if fk == "moe" else ("mamba_dense", i_md)
+                        lp = jax.tree.map(lambda t: t[idx], blk[group])
+                        xx, _, nh, nc = self._mamba_layer_fwd(lp, xx, hs[i_m], convs[i_m], fk, "decode")
+                        new_hs.append(nh)
+                        new_convs.append(nc)
+                        i_m += 1
+                        if fk == "moe":
+                            i_mm += 1
+                        else:
+                            i_md += 1
+                return xx, (new_kv, jnp.stack(new_hs), jnp.stack(new_convs))
+
+            x, (kvs, hs, convs) = jax.lax.scan(
+                block_body, x, (params["layers"], cache["kv"], hs_in, convs_in))
+            new_cache = dict(cache, kv=kvs,
+                             mamba_h=hs.reshape(-1, *hs.shape[2:]),
+                             mamba_conv=convs.reshape(-1, *convs.shape[2:]),
+                             pos=pos + 1)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_logits(params, x[:, 0], cfg)
+        return logits, new_cache
+
+
+# =============================================================================
+# Encoder-decoder (seamless-m4t): audio-frame encoder stub input
+# =============================================================================
+
+
+class EncDecModel:
+    """Enc-dec transformer; encoder consumes precomputed frame embeddings."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.is_encdec
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.act_sharding = None
+
+    def _constrain(self, x):
+        if self.act_sharding is not None and x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, self.act_sharding)
+        return x
+
+    def init_params(self, key) -> dict:
+        cfg, dtype = self.cfg, self.dtype
+        k1, k2, k3 = jax.random.split(key, 3)
+        params = init_embedding(k1, cfg, dtype)
+        params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        params["enc_final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        params["encoder"] = _stack_init(
+            lambda k: _init_encoder_layer(k, cfg, dtype), k2, cfg.num_encoder_layers)
+        params["decoder"] = _stack_init(
+            lambda k: _init_decoder_xattn_layer(k, cfg, dtype), k3, cfg.num_layers)
+        return params
+
+    def encode(self, params, frames):
+        """frames (B, S_enc, d_model) — stub frontend output."""
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+
+        def body(xx, lp):
+            xx = self._constrain(xx)
+            h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+            o = attn.causal_attention(lp["attn"], h, cfg, causal=False)
+            xx = xx + o
+            h2 = rms_norm(xx, lp["ln2"], cfg.norm_eps)
+            return xx + swiglu(h2, **lp["ffn"]), None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    def _memory_kv(self, params, memory):
+        cfg = self.cfg
+
+        def body(_, lp):
+            return None, jnp.stack(attn.project_memory_kv(lp["xattn"], memory, cfg))
+
+        _, mkv = jax.lax.scan(body, None, params["decoder"])
+        return mkv  # (L, 2, B, S_enc, KV, hd)
+
+    def _decoder_layer(self, lp, x, mem_kv, mode, cache_kv=None, pos=None):
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if mode == "decode":
+            o, new_kv = attn.decode_attention(lp["attn"], h, cache_kv, pos, cfg)
+        elif mode == "prefill":
+            o, (k, v) = attn.causal_attention(lp["attn"], h, cfg, return_kv=True)
+            new_kv = jnp.stack([k, v])
+        else:
+            o = attn.causal_attention(lp["attn"], h, cfg)
+            new_kv = None
+        x = x + o
+        hx = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        x = x + attn.cross_attention(lp["xattn"], hx, (mem_kv[0], mem_kv[1]), cfg)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + swiglu(h2, **lp["ffn"]), new_kv
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        mkvs = self._memory_kv(params, memory)
+        x = embed_tokens(params, batch["tokens"]).astype(self.dtype)
+
+        def body(xx, xs):
+            lp, mkv = xs
+            xx = self._constrain(xx)
+            xx, _ = self._decoder_layer(lp, xx, mkv, "train")
+            return xx, None
+
+        body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (params["decoder"], mkvs))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_logits(params, x, cfg)
+        ce = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int) -> dict:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        return {
+            "pos": jnp.zeros((), jnp.int32),
+            "kv": jnp.zeros((cfg.num_layers, 2, batch, max_len, cfg.num_kv_heads, hd), self.dtype),
+            "memory_kv": jnp.zeros(
+                (cfg.num_layers, 2, batch, enc_len, cfg.num_kv_heads, hd), self.dtype),
+        }
+
+    def prefill(self, params, tokens, frames):
+        cfg = self.cfg
+        memory = self.encode(params, frames)
+        mkvs = self._memory_kv(params, memory)
+        x = embed_tokens(params, tokens).astype(self.dtype)
+
+        def body(xx, xs):
+            lp, mkv = xs
+            xx = self._constrain(xx)
+            xx, kv = self._decoder_layer(lp, xx, mkv, "prefill")
+            return xx, kv
+
+        x, kvs = jax.lax.scan(body, x, (params["decoder"], mkvs))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_logits(params, x[:, -1], cfg)
+        cache = {"pos": jnp.asarray(tokens.shape[1], jnp.int32), "kv": kvs, "memory_kv": mkvs}
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = embed_tokens(params, tokens).astype(self.dtype)
+        pos = cache["pos"]
+
+        def body(xx, xs):
+            lp, kv_slice, mkv = xs
+            xx, new_kv = self._decoder_layer(lp, xx, mkv, "decode", kv_slice, pos)
+            return xx, new_kv
+
+        x, new_kvs = jax.lax.scan(body, x, (params["decoder"], cache["kv"], cache["memory_kv"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = lm_logits(params, x[:, 0], cfg)
+        return logits, dict(cache, kv=new_kvs, pos=pos + 1)
+
+
+def build_model(cfg: ModelConfig):
+    return EncDecModel(cfg) if cfg.is_encdec else LanguageModel(cfg)

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts FFN with capacity-bounded sort-scatter dispatch.
+
+TPU adaptation (DESIGN.md §3/§5): instead of the GShard (G,S,E,C) one-hot
+dispatch einsum (O(n*E*C) memory — infeasible at kimi scale: 1M tokens x
+384 experts), tokens are ranked inside their expert segment via a single
+argsort + bincount, scattered into a dense (E, C, d) buffer, processed
+with one batched expert matmul (MXU-friendly), and gathered back.  Expert
+dim E is sharded over `model` when divisible (expert parallel — GSPMD
+inserts the all-to-all at the data->expert boundary); otherwise d_expert
+is sharded (per-expert tensor parallel).  Aux load-balance loss follows
+Switch/GShard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, init_ffn, swiglu
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    ew = lambda k, a, b: (jax.random.normal(k, (m.num_experts, a, b), jnp.float32)
+                          / (a ** 0.5)).astype(dtype)
+    p = {
+        "router": dense_init(ks[0], d, m.num_experts, jnp.float32),
+        "w_gate": ew(ks[1], d, m.d_expert),
+        "w_up": ew(ks[2], d, m.d_expert),
+        "w_down": ew(ks[3], m.d_expert, d),
+    }
+    if m.num_shared_experts:
+        d_sh = m.d_shared or m.num_shared_experts * m.d_expert
+        p["shared"] = init_ffn(ks[4], d, d_sh, dtype)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.num_experts) + 1
+    return max(8, min(c, n_tokens))
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """x (B,S,d) -> (out (B,S,d), aux_loss scalar fp32)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    e, k = m.num_experts, m.top_k
+    xf = x.reshape(n, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (n,E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                      # (n,k)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+
+    # ---- dispatch: rank within expert segment via sort -------------------
+    c = capacity(n, cfg)
+    ef = idx.reshape(-1)                                     # (n*k,)
+    order = jnp.argsort(ef)                                  # stable
+    se = ef[order]
+    counts = jnp.bincount(ef, length=e)                      # (E,)
+    seg_start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(n * k) - seg_start[se]                  # rank in segment
+    keep = pos < c
+    slot = se * c + pos                                      # (n*k,) sorted order
+    tok = order // k
+
+    buf = jnp.zeros((e * c, d), x.dtype)
+    buf = buf.at[jnp.where(keep, slot, e * c)].set(xf[tok], mode="drop")
+    h = buf.reshape(e, c, d)
+
+    # ---- expert computation (batched over E) -----------------------------
+    hg = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
+    hu = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    hh = jax.nn.silu(hg.astype(jnp.float32)).astype(x.dtype) * hu
+    y = jnp.einsum("ecf,efd->ecd", hh, p["w_down"]).reshape(e * c, d)
+
+    # ---- combine ----------------------------------------------------------
+    contrib_sorted = y[jnp.minimum(slot, e * c - 1)] * keep[:, None].astype(y.dtype)
+    inv = jnp.argsort(order)
+    contrib = contrib_sorted[inv].reshape(n, k, d)
+    out = jnp.sum(contrib * gate[..., None].astype(y.dtype), axis=1)
+
+    if "shared" in p:
+        out = out + swiglu(xf, **p["shared"])
+
+    # ---- Switch-style aux load-balance loss --------------------------------
+    frac_tokens = jnp.bincount(ef, length=e).astype(jnp.float32) / (n * k)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = m.router_aux_loss * e * jnp.sum(frac_tokens * frac_probs)
+
+    return out.reshape(b, s, d), aux

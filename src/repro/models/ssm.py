@@ -1,0 +1,281 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba selective SSM.
+
+Both are implemented in a *chunked* form for training/prefill (sequence
+split into chunks; inter-chunk state carried by lax.scan; intra-chunk
+contributions computed with relative decays which are always <= 0 in log
+space, so ``exp`` never overflows) and an O(1) single-step form for
+decode.  TPU adaptation note (DESIGN.md §3): chunking is chosen so the
+intra-chunk working set fits VMEM-scale tiles and matmul dims stay
+MXU-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mix (data-dependent per-channel decay, matrix-valued state)
+# ---------------------------------------------------------------------------
+
+RWKV_CHUNK = 32
+_DECAY_LORA = 64
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 8)
+    p = {
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(jnp.float32),  # r,k,v,g,w mixes
+        "wr": dense_init(ks[1], d, d, dtype),
+        "wk": dense_init(ks[2], d, d, dtype),
+        "wv": dense_init(ks[3], d, d, dtype),
+        "wg": dense_init(ks[4], d, d, dtype),
+        "w_lora_a": dense_init(ks[5], d, _DECAY_LORA, dtype),
+        "w_lora_b": dense_init(ks[6], _DECAY_LORA, d, dtype),
+        "w_bias": jnp.full((d,), -1.0, jnp.float32),
+        "u": (jax.random.normal(ks[7], (h, hd), jnp.float32) * 0.1).astype(jnp.float32),
+        "wo": dense_init(jax.random.fold_in(key, 99), d, d, dtype),
+        "ln_x": jnp.zeros((d,), jnp.float32),
+    }
+    return p
+
+
+def _rwkv_mix(x: jnp.ndarray, x_prev: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Token shift interpolation: x + mu*(shift(x) - x)."""
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def _rwkv_projections(p: dict, x: jnp.ndarray, shift: jnp.ndarray, cfg: ModelConfig):
+    """x (B,S,d), shift (B,d) = last token of previous segment."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xs = jnp.concatenate([shift[:, None], x[:, :-1]], axis=1)
+    mu = p["mu"]
+    r = jnp.einsum("bsd,de->bse", _rwkv_mix(x, xs, mu[0]), p["wr"])
+    k = jnp.einsum("bsd,de->bse", _rwkv_mix(x, xs, mu[1]), p["wk"])
+    v = jnp.einsum("bsd,de->bse", _rwkv_mix(x, xs, mu[2]), p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", _rwkv_mix(x, xs, mu[3]), p["wg"]).astype(jnp.float32))
+    wx = _rwkv_mix(x, xs, mu[4])
+    w_log = -jax.nn.softplus(
+        (jnp.einsum("bsd,dr->bsr", wx, p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+        + p["w_bias"])                                        # (B,S,d) <= 0
+    shape = (b, s, h, hd)
+    return (r.reshape(shape).astype(jnp.float32), k.reshape(shape).astype(jnp.float32),
+            v.reshape(shape).astype(jnp.float32), g, w_log.reshape(shape), x[:, -1])
+
+
+def _rwkv_chunk(r, k, v, w_log, u, state):
+    """One chunk of the WKV recurrence.
+
+    r,k,v,w_log: (B,C,H,hd) fp32; u (H,hd); state (B,H,hd,hd).
+    o_t = r_t . S_{t-1} + (r_t . (u*k_t)) v_t ;  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    Relative log decays b_t - a_j (j<t) are sums of w_log over (j, t) so
+    they are <= 0 -> exp() is safe.
+    """
+    c = r.shape[1]
+    a = jnp.cumsum(w_log, axis=1)            # inclusive  (B,C,H,hd)
+    b_ex = a - w_log                          # exclusive
+    # inter-chunk: o_inter[t] = (r_t * exp(b_t)) @ S0
+    r_dec = r * jnp.exp(b_ex)
+    o_inter = jnp.einsum("bchd,bhde->bche", r_dec, state)
+    # intra-chunk strict-lower scores with per-dim relative decay
+    dlog = b_ex[:, :, None] - a[:, None, :]   # (B,Ct,Cj,H,hd); <=0 for j<t
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[None, :, :, None, None]
+    dec = jnp.where(mask, jnp.exp(jnp.minimum(dlog, 0.0)), 0.0)
+    scores = jnp.einsum("bthd,bjhd,btjhd->bhtj", r, k, dec)
+    o_intra = jnp.einsum("bhtj,bjhe->bthe", scores, v)
+    # bonus diagonal (current token, weight u)
+    rb = jnp.einsum("bthd,hd,bthd->bth", r, u, k)
+    o = o_inter + o_intra + rb[..., None] * v
+    # state update: S_end = diag(exp(a_C)) S0 + sum_j (exp(a_C - a_j) * k_j)^T v_j
+    a_last = a[:, -1]                         # (B,H,hd)
+    k_dec = k * jnp.exp(a_last[:, None] - a)  # <=0 exponent
+    new_state = state * jnp.exp(a_last)[..., None] + jnp.einsum("bjhd,bjhe->bhde", k_dec, v)
+    return o, new_state
+
+
+def rwkv_time_mix(p: dict, x: jnp.ndarray, state: jnp.ndarray, shift: jnp.ndarray,
+                  cfg: ModelConfig, chunk: int = RWKV_CHUNK):
+    """Full-sequence (train/prefill). Returns (out (B,S,d), state, shift)."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    r, k, v, g, w_log, new_shift = _rwkv_projections(p, x, shift, cfg)
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        w_log = jnp.pad(w_log, ((0, 0), (0, pad), (0, 0), (0, 0)))  # decay 1, k=0 -> no-op
+    nc = (s + pad) // chunk
+
+    def body(st, xs):
+        rc, kc, vc, wc = xs
+        o, st2 = _rwkv_chunk(rc, kc, vc, wc, p["u"], st)
+        return st2, o
+
+    resh = lambda t: t.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    new_state, outs = jax.lax.scan(body, state, (resh(r), resh(k), resh(v), resh(w_log)))
+    o = outs.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, hd)[:, :s]
+    o = rms_norm(o, p["ln_x"].reshape(h, hd), cfg.norm_eps)  # per-head group norm
+    o = (o.reshape(b, s, d) * g).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", o, p["wo"])
+    return out, new_state, new_shift
+
+
+def rwkv_time_mix_step(p: dict, x: jnp.ndarray, state: jnp.ndarray, shift: jnp.ndarray,
+                       cfg: ModelConfig):
+    """Single-token decode. x (B,1,d). Returns (out, state, shift)."""
+    b, _, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    r, k, v, g, w_log, new_shift = _rwkv_projections(p, x, shift, cfg)
+    r, k, v, w_log = (t[:, 0] for t in (r, k, v, w_log))     # (B,H,hd)
+    o = jnp.einsum("bhd,bhde->bhe", r, state)
+    rb = jnp.einsum("bhd,hd,bhd->bh", r, p["u"], k)
+    o = o + rb[..., None] * v
+    new_state = state * jnp.exp(w_log)[..., None] + jnp.einsum("bhd,bhe->bhde", k, v)
+    o = rms_norm(o[:, None], p["ln_x"].reshape(h, hd), cfg.norm_eps)
+    o = (o.reshape(b, 1, d) * g.reshape(b, 1, d)).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", o, p["wo"]), new_state, new_shift
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": jax.random.uniform(jax.random.fold_in(key, 1), (2, d), jnp.float32),
+        "wk": dense_init(k1, d, cfg.d_ff, dtype),
+        "wv": dense_init(k2, cfg.d_ff, d, dtype),
+        "wr": dense_init(k3, d, d, dtype),
+    }
+
+
+def rwkv_channel_mix(p: dict, x: jnp.ndarray, shift: jnp.ndarray):
+    """Squared-ReLU FFN with receptance gate; shift (B,d). Returns (out, shift)."""
+    xs = jnp.concatenate([shift[:, None], x[:, :-1]], axis=1)
+    xk = _rwkv_mix(x, xs, p["mu"][0])
+    xr = _rwkv_mix(x, xs, p["mu"][1])
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"]).astype(jnp.float32)))
+    vv = jnp.einsum("bsf,fd->bsd", k.astype(x.dtype), p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]).astype(jnp.float32))
+    return (r * vv.astype(jnp.float32)).astype(x.dtype), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective SSM
+# ---------------------------------------------------------------------------
+
+MAMBA_CHUNK = 128
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_dim, di), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], di, rank + 2 * n, dtype),
+        "dt_proj": dense_init(ks[3], rank, di, dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _mamba_conv(p: dict, x: jnp.ndarray, conv_state: jnp.ndarray):
+    """Causal depthwise conv, kernel k. x (B,S,di); conv_state (B,k-1,di)."""
+    kk = p["conv_w"].shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(kk):
+        out = out + xp[:, j:j + x.shape[1]].astype(jnp.float32) * p["conv_w"][j].astype(jnp.float32)
+    out = out + p["conv_b"]
+    new_state = xp[:, -(kk - 1):] if kk > 1 else conv_state
+    return out.astype(x.dtype), new_state
+
+
+def _mamba_scan_inputs(p: dict, xc: jnp.ndarray, cfg: ModelConfig):
+    """xc (B,S,di) post-conv+silu -> dt (B,S,di) fp32, B/C (B,S,N) fp32."""
+    n = cfg.ssm_state_dim
+    rank = p["dt_proj"].shape[0]
+    proj = jnp.einsum("bsd,de->bse", xc, p["x_proj"])
+    dt_r, bm, cm = jnp.split(proj, [rank, rank + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_r, p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"])
+    return dt, bm.astype(jnp.float32), cm.astype(jnp.float32)
+
+
+def mamba_forward(p: dict, x: jnp.ndarray, h_state: jnp.ndarray, conv_state: jnp.ndarray,
+                  cfg: ModelConfig, chunk: int = MAMBA_CHUNK):
+    """Full-sequence. x (B,S,d); h_state (B,di,N) fp32; conv (B,k-1,di).
+    Returns (out (B,S,d), h_state, conv_state)."""
+    b, s, d = x.shape
+    n = cfg.ssm_state_dim
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc_raw, new_conv = _mamba_conv(p, x_in, conv_state)
+    xc = jax.nn.silu(xc_raw.astype(jnp.float32)).astype(x.dtype)
+    dt, bm, cm = _mamba_scan_inputs(p, xc, cfg)
+    a_mat = -jnp.exp(p["a_log"])                            # (di,N) < 0
+    pad = (-s) % chunk
+    if pad:
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))        # dt=0 -> a=1,b=0: no-op
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p = xc
+    nc = (s + pad) // chunk
+    di = xc.shape[-1]
+    resh3 = lambda t: t.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+
+    def body(h0, xs):
+        dtc, bc, cc, xcc = xs                               # (B,C,di)/(B,C,N)
+        a = jnp.exp(dtc[..., None] * a_mat)                 # (B,C,di,N) in (0,1]
+        bx = (dtc * xcc.astype(jnp.float32))[..., None] * bc[:, :, None, :]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_scan = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        h = a_cum * h0[:, None] + b_scan                    # (B,C,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h, cc)
+        return h[:, -1], y
+
+    new_h, ys = jax.lax.scan(body, h_state, (resh3(dt), resh3(bm), resh3(cm), resh3(xc_p)))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, nc * chunk, di)[:, :s]
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), new_h, new_conv
+
+
+def mamba_step(p: dict, x: jnp.ndarray, h_state: jnp.ndarray, conv_state: jnp.ndarray,
+               cfg: ModelConfig):
+    """Single-token decode. x (B,1,d)."""
+    b = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc_raw, new_conv = _mamba_conv(p, x_in, conv_state)
+    xc = jax.nn.silu(xc_raw.astype(jnp.float32)).astype(x.dtype)
+    dt, bm, cm = _mamba_scan_inputs(p, xc, cfg)
+    a_mat = -jnp.exp(p["a_log"])
+    a = jnp.exp(dt[:, 0, :, None] * a_mat)                  # (B,di,N)
+    bx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * bm[:, 0, None, :]
+    new_h = a * h_state + bx
+    y = jnp.einsum("bdn,bn->bd", new_h, cm[:, 0])
+    y = y + p["d_skip"] * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None], new_h, new_conv

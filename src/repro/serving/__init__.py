@@ -1,0 +1,6 @@
+from repro.serving.engine import LLMEngine, PagedModelRunner
+from repro.serving.kv_cache import BlockManager, NoFreeBlocks
+from repro.serving.request import CompletionRecord, Request, RequestState
+
+__all__ = ["LLMEngine", "PagedModelRunner", "BlockManager", "NoFreeBlocks",
+           "CompletionRecord", "Request", "RequestState"]

@@ -1,0 +1,274 @@
+"""LLM engine instance: paged-KV model runner + continuous batching.
+
+``PagedModelRunner`` executes real tokens with the paged KV pool (the
+Pallas kernel's layout; ref backend on CPU, pallas on TPU).
+``LLMEngine`` implements vLLM-style continuous batching with dynamic
+memory allocation and preemption-by-recompute — the behaviours the paper's
+dispatcher is designed around (§2.2.3).
+
+Engines expose the *status monitor* surface Kairos polls (§3 overview):
+KV memory in use / capacity, running/waiting counts, preemption counter.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import attention as attn_mod
+from repro.models.layers import embed_tokens, lm_logits, rms_norm, swiglu
+from repro.models.model import LanguageModel
+from repro.models.moe import moe_ffn
+from repro.serving.kv_cache import BlockManager, NoFreeBlocks
+from repro.serving.request import Request, RequestState
+
+
+# =============================================================================
+# Paged model runner (uniform-attention architectures)
+# =============================================================================
+
+
+class PagedModelRunner:
+    """Runs a :class:`LanguageModel` against a paged KV pool.
+
+    Pool: (L, 2, num_blocks, block_size, n_kv, hd).  Decode is batched
+    across sequences at arbitrary positions via block tables.
+    """
+
+    def __init__(self, model: LanguageModel, params, num_blocks: int,
+                 block_size: int, max_batch: int = 8, backend: Optional[str] = None):
+        cfg = model.cfg
+        assert model.uniform_kind == "attn", "paged runner serves attention archs"
+        assert cfg.sliding_window is None, "windowed paged decode: see DESIGN.md"
+        self.model, self.cfg, self.params = model, cfg, params
+        self.block_size, self.num_blocks = block_size, num_blocks
+        self.max_batch = max_batch
+        self.backend = backend or kops.default_backend()
+        hd = cfg.resolved_head_dim
+        self.pool = jnp.zeros(
+            (cfg.num_layers, 2, num_blocks, block_size, cfg.num_kv_heads, hd),
+            model.dtype)
+        self._decode_fn = self._build_decode()
+        self._prefill_fn = jax.jit(self.model.prefill)
+
+    # -- prefill: run the model once, scatter its contiguous KV into pages ---
+    def prefill(self, tokens: jnp.ndarray, block_table: List[int]):
+        """tokens (S,) int32 -> last-token logits (V,). Fills the pool."""
+        s = tokens.shape[0]
+        logits, cache = self._prefill_fn(self.params, tokens[None])
+        kv = cache["kv"]                                   # (L,2,1,S,kv,hd)
+        bs = self.block_size
+        nb = -(-s // bs)
+        pad = nb * bs - s
+        kv = jnp.pad(kv, [(0, 0), (0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+        kv = kv.reshape(kv.shape[0], 2, nb, bs, *kv.shape[4:])
+        bt = jnp.asarray(block_table[:nb], jnp.int32)
+        self.pool = self.pool.at[:, :, bt].set(kv)
+        return logits[0]
+
+    # -- batched paged decode --------------------------------------------------
+    def _build_decode(self):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        bs = self.block_size
+        backend = self.backend
+
+        def step(params, pool, tokens, positions, block_tables, live):
+            """tokens (B,), positions (B,), block_tables (B, nbmax), live (B,) bool."""
+            x = embed_tokens(params, tokens[:, None]).astype(pool.dtype)   # (B,1,d)
+            ctx = jnp.where(live, positions + 1, 1).astype(jnp.int32)
+
+            def body(carry, xs):
+                xx, pool_l_unused = carry, None
+                lp, pool_layer = xs
+                h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+                q, k, v = attn_mod._project_qkv(lp["attn"], h, h, cfg)
+                sin, cos = attn_mod.rope_at(positions[:, None], hd, cfg.rope_theta)
+                q = attn_mod.apply_rope(q, sin, cos)
+                k = attn_mod.apply_rope(k, sin, cos)
+                # write k/v at (table[pos // bs], pos % bs)
+                flat = block_tables[jnp.arange(tokens.shape[0]), positions // bs] * bs \
+                    + positions % bs
+                kp = pool_layer[0].reshape(-1, cfg.num_kv_heads, hd).at[flat].set(
+                    k[:, 0], mode="drop").reshape(pool_layer[0].shape)
+                vp = pool_layer[1].reshape(-1, cfg.num_kv_heads, hd).at[flat].set(
+                    v[:, 0], mode="drop").reshape(pool_layer[1].shape)
+                g = cfg.num_heads // cfg.num_kv_heads
+                qg = q.reshape(q.shape[0], cfg.num_kv_heads, g, hd)
+                o = kops.paged_attention(qg, kp, vp, block_tables, ctx, backend=backend)
+                o = o.reshape(q.shape[0], 1, cfg.num_heads * hd)
+                xx = xx + jnp.einsum("bse,ed->bsd", o, lp["attn"]["wo"])
+                h2 = rms_norm(xx, lp["ln2"], cfg.norm_eps)
+                if "moe" in lp:
+                    f, _ = moe_ffn(lp["moe"], h2, cfg)
+                else:
+                    f = swiglu(h2, **lp["ffn"])
+                return xx + f, jnp.stack([kp, vp])
+
+            x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            logits = lm_logits(params, x[:, 0], cfg)
+            return logits, new_pool
+
+        return jax.jit(step)
+
+    def decode_batch(self, tokens: np.ndarray, positions: np.ndarray,
+                     block_tables: np.ndarray, live: np.ndarray):
+        """All inputs padded to a fixed batch; returns logits (B, V)."""
+        logits, self.pool = self._decode_fn(
+            self.params, self.pool,
+            jnp.asarray(tokens, jnp.int32), jnp.asarray(positions, jnp.int32),
+            jnp.asarray(block_tables, jnp.int32), jnp.asarray(live, bool))
+        return logits
+
+
+# =============================================================================
+# Continuous-batching engine
+# =============================================================================
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n_finished: int = 0
+    n_preempted: int = 0
+    n_admitted: int = 0
+    recent_oom: bool = False      # set on preemption; cleared by monitor reads
+
+
+class LLMEngine:
+    """One LLM instance: waiting queue -> continuous batch -> completions."""
+
+    def __init__(self, runner: PagedModelRunner, instance_id: int = 0,
+                 max_batch: int = 8, eos_token: int = -1,
+                 clock: Callable[[], float] = time.monotonic):
+        self.runner = runner
+        self.bm = BlockManager(runner.num_blocks, runner.block_size)
+        self.instance_id = instance_id
+        self.max_batch = max_batch
+        self.eos_token = eos_token
+        self.clock = clock
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.running: List[Request] = []
+        self.stats = EngineStats()
+        self._next_tok: dict[int, int] = {}
+
+    # ---------------------------------------------------------------- monitor
+    @property
+    def kv_capacity_tokens(self) -> int:
+        return self.bm.num_blocks * self.bm.block_size
+
+    @property
+    def kv_used_tokens(self) -> int:
+        return sum(r.total_len for r in self.running)
+
+    def memory_free_fraction(self) -> float:
+        return self.bm.free_blocks / self.bm.num_blocks
+
+    def poll_oom(self) -> bool:
+        oom, self.stats.recent_oom = self.stats.recent_oom, False
+        return oom
+
+    # ---------------------------------------------------------------- intake
+    def submit(self, req: Request):
+        req.state = RequestState.WAITING
+        req.instance_id = self.instance_id
+        self.waiting.append(req)
+
+    # ---------------------------------------------------------------- stepping
+    def _admit(self):
+        while (self.waiting and len(self.running) < self.max_batch
+               and self.bm.can_allocate(self.waiting[0].req_id,
+                                        self.waiting[0].prompt_len + 1)):
+            req = self.waiting.popleft()
+            table = self.bm.allocate(req.req_id, req.prompt_len + 1)
+            logits = self.runner.prefill(jnp.asarray(req.prompt_tokens, jnp.int32), table)
+            self._next_tok[req.req_id] = int(jnp.argmax(logits))
+            if req.exec_start_time < 0:
+                req.exec_start_time = self.clock()
+            req.state = RequestState.RUNNING
+            self.running.append(req)
+            self.stats.n_admitted += 1
+
+    def _preempt_one(self):
+        """vLLM recompute policy: victim = latest-arrived running request."""
+        victim = max(self.running, key=lambda r: (r.arrival_time, r.req_id))
+        self.running.remove(victim)
+        self.bm.free(victim.req_id)
+        self._next_tok.pop(victim.req_id, None)
+        victim.state = RequestState.PREEMPTED
+        victim.n_preemptions += 1
+        victim.output_len = 0                      # recompute from scratch
+        victim.output_tokens.clear()
+        self.waiting.appendleft(victim)
+        self.stats.n_preempted += 1
+        self.stats.recent_oom = True
+
+    def _ensure_growable(self):
+        """The whole running batch needs room to grow one token this step
+        (cumulative blocks, not per-request)."""
+        def deficit():
+            need = sum(
+                max(self.bm.blocks_needed(r.total_len + 1)
+                    - len(self.bm.block_table(r.req_id)), 0)
+                for r in self.running[: self.runner.max_batch])
+            return need - self.bm.free_blocks
+
+        while self.running and deficit() > 0:
+            self._preempt_one()
+
+    def step(self) -> List[Request]:
+        """One continuous-batching iteration; returns finished requests."""
+        self._admit()
+        if not self.running:
+            return []
+        self._ensure_growable()
+        if not self.running:
+            return []
+        b = self.runner.max_batch
+        batch = self.running[:b]
+        nbmax = max(len(self.bm.block_table(r.req_id)) + 1 for r in batch)
+        tokens = np.zeros((b,), np.int32)
+        positions = np.zeros((b,), np.int32)
+        tables = np.zeros((b, nbmax), np.int32)
+        live = np.zeros((b,), bool)
+        for i, r in enumerate(batch):
+            self.bm.allocate(r.req_id, r.total_len + 1)
+            t = self.bm.block_table(r.req_id)
+            tables[i, :len(t)] = t
+            tokens[i] = self._next_tok[r.req_id]
+            positions[i] = r.total_len
+            live[i] = True
+        logits = self.runner.decode_batch(tokens, positions, tables, live)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        finished = []
+        for i, r in enumerate(batch):
+            r.output_tokens.append(int(tokens[i]))
+            r.output_len += 1
+            self._next_tok[r.req_id] = int(nxt[i])
+            done = (r.output_len >= r.max_new_tokens
+                    or (self.eos_token >= 0 and int(nxt[i]) == self.eos_token))
+            if done:
+                r.state = RequestState.FINISHED
+                r.finish_time = self.clock()
+                self.bm.free(r.req_id)
+                self._next_tok.pop(r.req_id, None)
+                self.running.remove(r)
+                finished.append(r)
+                self.stats.n_finished += 1
+        return finished
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.running and not self.waiting:
+                break
+        return out

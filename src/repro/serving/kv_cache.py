@@ -1,0 +1,71 @@
+"""Paged KV-cache block manager (vLLM-style, TPU-native layout).
+
+The pool is ``(num_blocks, block_size, n_kv, head_dim)`` per layer (the
+layout the Pallas paged-attention kernel consumes).  The manager hands out
+physical block ids; sequences own ordered block lists (their block table).
+
+Invariants (property-tested in tests/test_kv_cache.py):
+  * a block is owned by at most one sequence;
+  * free + allocated == num_blocks;
+  * freeing a sequence returns exactly the blocks it held.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+class NoFreeBlocks(Exception):
+    pass
+
+
+class BlockManager:
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._owned: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------------ state
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.used_blocks / self.num_blocks
+
+    def blocks_needed(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.block_size)
+
+    def can_allocate(self, seq_id: int, num_tokens: int) -> bool:
+        have = len(self._owned.get(seq_id, ()))
+        need = self.blocks_needed(num_tokens) - have
+        return need <= len(self._free)
+
+    # ------------------------------------------------------------- operations
+    def allocate(self, seq_id: int, num_tokens: int) -> List[int]:
+        """Grow seq's block list to cover num_tokens; returns full table."""
+        table = self._owned.setdefault(seq_id, [])
+        need = self.blocks_needed(num_tokens) - len(table)
+        if need > len(self._free):
+            raise NoFreeBlocks(
+                f"need {need} blocks, have {len(self._free)} free")
+        for _ in range(max(need, 0)):
+            table.append(self._free.pop())
+        return table
+
+    def free(self, seq_id: int) -> List[int]:
+        blocks = self._owned.pop(seq_id, [])
+        self._free.extend(reversed(blocks))
+        return blocks
+
+    def block_table(self, seq_id: int) -> List[int]:
+        return list(self._owned.get(seq_id, ()))
+
+    def owned_seqs(self) -> List[int]:
+        return list(self._owned)

@@ -1,0 +1,99 @@
+"""Request objects shared by the load balancer, engines, and simulator.
+
+A request carries the Kairos **system identifiers** (§4.1): agent name,
+globally unique message id, upstream agent name, and execution timestamps.
+``app_start_time`` is the application-level start time used by the
+intra-agent scheduling mechanism (§5.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Optional
+
+_req_counter = itertools.count()
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"          # waiting at the load balancer
+    WAITING = "waiting"        # dispatched to an instance, not yet admitted
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    # --- identity / Kairos system identifiers (§4.1) ------------------------
+    agent_name: str
+    msg_id: str
+    upstream_name: Optional[str] = None
+    app_name: str = ""
+    req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+
+    # --- workload ------------------------------------------------------------
+    prompt_len: int = 0
+    prompt_tokens: Optional[object] = None      # jnp array for the real engine
+    max_new_tokens: int = 512
+    true_output_len: int = 0                    # sim: hidden until executed
+
+    # --- timestamps (§4.1 Execution Timestamps) ------------------------------
+    app_start_time: float = 0.0                 # arrival at the frontend
+    arrival_time: float = 0.0                   # arrival at this LLM stage
+    exec_start_time: float = -1.0               # LLM execution start
+    finish_time: float = -1.0
+
+    # --- runtime state --------------------------------------------------------
+    state: RequestState = RequestState.QUEUED
+    output_len: int = 0
+    n_preemptions: int = 0
+    instance_id: int = -1
+    output_tokens: list = dataclasses.field(default_factory=list)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.output_len
+
+    @property
+    def exec_latency(self) -> float:
+        if self.exec_start_time < 0 or self.finish_time < 0:
+            return float("nan")
+        return self.finish_time - self.exec_start_time
+
+    @property
+    def e2e_latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    def queueing_time(self) -> float:
+        if self.exec_start_time < 0:
+            return float("nan")
+        return self.exec_start_time - self.arrival_time
+
+
+@dataclasses.dataclass
+class CompletionRecord:
+    """What the orchestrator collects when a request finishes (§4).
+
+    ``start_time`` is the stage arrival (used for *remaining* end-to-end
+    latency, which legitimately includes queueing); ``exec_start_time`` is
+    the LLM execution start (used for the single-request execution latency
+    distribution that feeds the memory ramps, Eq. 2)."""
+    agent_name: str
+    msg_id: str
+    upstream_name: Optional[str]
+    app_name: str
+    start_time: float
+    end_time: float
+    prompt_len: int
+    output_len: int
+    exec_start_time: float = -1.0
+
+    @property
+    def latency(self) -> float:
+        return self.end_time - self.start_time
+
+    @property
+    def exec_latency(self) -> float:
+        t0 = self.exec_start_time if self.exec_start_time >= 0 else self.start_time
+        return self.end_time - t0

@@ -1,0 +1,13 @@
+from repro.sim.cost_model import COST_MODELS, LLAMA2_13B, LLAMA3_8B, CostModel
+from repro.sim.simulator import SimConfig, SimInstance, SimResults, Simulation, run_policy
+from repro.sim.workload import (
+    AgentProfile,
+    AppSpec,
+    arrival_times,
+    colocated_apps,
+    make_app,
+)
+
+__all__ = ["COST_MODELS", "LLAMA2_13B", "LLAMA3_8B", "CostModel", "SimConfig",
+           "SimInstance", "SimResults", "Simulation", "run_policy",
+           "AgentProfile", "AppSpec", "arrival_times", "colocated_apps", "make_app"]

@@ -1,0 +1,385 @@
+"""Discrete-event cluster simulator.
+
+Reproduces the paper's end-to-end experiments (Figs 14–18) at production
+scale.  **Every scheduling/dispatching decision is made by the production
+Kairos code** (`repro.core.*` — orchestrator, Wasserstein+MDS priorities,
+time-slot dispatcher, baselines); only LLM execution is replaced by the
+calibrated iteration cost model and sampled output lengths.  Instances
+run real continuous batching with the real `BlockManager`, including
+preemption-by-recompute.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import itertools
+import math
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    BestFitOracleDispatcher,
+    FCFSScheduler,
+    InstanceModel,
+    KairosScheduler,
+    LoadBalancer,
+    Orchestrator,
+    OracleScheduler,
+    RoundRobinDispatcher,
+    TimeSlotDispatcher,
+    TopoScheduler,
+)
+from repro.core.orchestrator import HardwareProfile
+from repro.serving.kv_cache import BlockManager
+from repro.serving.request import CompletionRecord, Request, RequestState
+from repro.sim.cost_model import LLAMA3_8B, CostModel
+from repro.sim.workload import AppSpec, arrival_times
+
+AGENT_OVERHEAD = 0.02       # local (non-LLM) agent compute between stages (s)
+BALANCER_PERIOD = 0.05      # retry period when requests sit in the queue (s)
+
+
+# =============================================================================
+# simulated instance (continuous batching at iteration granularity)
+# =============================================================================
+
+
+class SimInstance:
+    def __init__(self, instance_id: int, cost: CostModel,
+                 kv_capacity_tokens: int, block_size: int = 16,
+                 max_batch: int = 16):
+        self.instance_id = instance_id
+        self.cost = cost
+        self.bm = BlockManager(kv_capacity_tokens // block_size, block_size)
+        self.max_batch = max_batch
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.running: List[Request] = []
+        self.n_preempted = 0
+        self.recent_oom = False
+        self.busy = False
+
+    # ------------------------------------------------------------------ intake
+    def submit(self, req: Request):
+        req.state = RequestState.WAITING
+        req.instance_id = self.instance_id
+        self.waiting.append(req)
+
+    def can_admit(self, req: Request, watermark: float = 0.90) -> bool:
+        """Immediate admission capacity: batch slot + prompt memory below a
+        high-watermark (vLLM-style hysteresis against growth thrash)."""
+        if len(self.running) + len(self.waiting) >= self.max_batch:
+            return False
+        pending = sum(r.prompt_len + 1 for r in self.waiting)
+        need = self.bm.blocks_needed(req.prompt_len + 1 + pending)
+        budget = int(self.bm.num_blocks * watermark) - self.bm.used_blocks
+        return need <= budget
+
+    # ------------------------------------------------------------------ policy
+    def _preempt_one(self, now: float):
+        victim = max(self.running, key=lambda r: (r.arrival_time, r.req_id))
+        self.running.remove(victim)
+        self.bm.free(victim.req_id)
+        victim.state = RequestState.PREEMPTED
+        victim.n_preemptions += 1
+        victim.output_len = 0                     # recompute from scratch
+        self.waiting.appendleft(victim)
+        self.n_preempted += 1
+        self.recent_oom = True
+
+    def _ensure_growable(self, now: float):
+        def deficit():
+            need = sum(
+                max(self.bm.blocks_needed(r.total_len + 1)
+                    - len(self.bm.block_table(r.req_id)), 0)
+                for r in self.running[: self.max_batch])
+            return need - self.bm.free_blocks
+
+        while self.running and deficit() > 0:
+            self._preempt_one(now)
+
+    # ------------------------------------------------------------------ step
+    def step(self, now: float) -> Tuple[List[Request], Optional[float]]:
+        """Run one continuous-batching iteration starting at `now`.
+        Returns (requests finished at now+dt, dt) or ([], None) if idle."""
+        prefill_tokens = 0
+        watermark_blocks = int(self.bm.num_blocks * 0.95)
+        while (self.waiting and len(self.running) < self.max_batch
+               and self.bm.can_allocate(self.waiting[0].req_id,
+                                        self.waiting[0].prompt_len + 1)
+               and (self.bm.used_blocks
+                    + self.bm.blocks_needed(self.waiting[0].prompt_len + 1)
+                    <= watermark_blocks)):
+            req = self.waiting.popleft()
+            self.bm.allocate(req.req_id, req.prompt_len + 1)
+            if req.exec_start_time < 0:
+                req.exec_start_time = now
+            req.state = RequestState.RUNNING
+            self.running.append(req)
+            prefill_tokens += req.prompt_len
+        if not self.running:
+            return [], None
+        self._ensure_growable(now)
+        if not self.running:
+            return [], None
+        batch = self.running[: self.max_batch]
+        for r in batch:
+            self.bm.allocate(r.req_id, r.total_len + 1)
+        dt = self.cost.iteration_time(len(batch), prefill_tokens)
+        finished = []
+        for r in batch:
+            r.output_len += 1
+            if r.output_len >= r.true_output_len:
+                r.state = RequestState.FINISHED
+                r.finish_time = now + dt
+                self.bm.free(r.req_id)
+                self.running.remove(r)
+                finished.append(r)
+        return finished, dt
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.running or self.waiting)
+
+
+# =============================================================================
+# simulation
+# =============================================================================
+
+
+@dataclasses.dataclass
+class SimConfig:
+    apps: List[AppSpec]
+    policy: str = "kairos"            # kairos|parrot|ayo|w/o-priority|w/o-packing|oracle
+    rate: float = 6.0                 # workflows/s across all apps
+    duration: float = 120.0
+    n_instances: int = 4
+    kv_capacity_tokens: int = 12288   # per instance (pressure regime, §2.2.3)
+    max_batch: int = 48               # memory-bound like the paper's vLLM setup
+    cost: CostModel = LLAMA3_8B
+    seed: int = 0
+    warmup_frac: float = 0.1          # excluded from metrics (online learning)
+
+
+@dataclasses.dataclass
+class WorkflowState:
+    msg_id: str
+    app: AppSpec
+    start_time: float
+    outstanding: int = 0
+    hops: int = 0
+    total_tokens: int = 0
+    done_time: float = -1.0
+    requests: List[Request] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SimResults:
+    workflows: List[WorkflowState]
+    requests: List[Request]
+    n_preempted: int
+    queueing_ratio: float
+    policy: str
+
+    def token_latencies(self) -> np.ndarray:
+        """Program-level token latency [37]: e2e response time / tokens."""
+        vals = [(w.done_time - w.start_time) / max(w.total_tokens, 1)
+                for w in self.workflows if w.done_time >= 0]
+        return np.asarray(vals)
+
+    def summary(self) -> Dict[str, float]:
+        tl = self.token_latencies()
+        if len(tl) == 0:
+            return {"avg": float("nan")}
+        return {
+            "avg": float(np.mean(tl)),
+            "p50": float(np.percentile(tl, 50)),
+            "p90": float(np.percentile(tl, 90)),
+            "p95": float(np.percentile(tl, 95)),
+            "p99": float(np.percentile(tl, 99)),
+            "n_workflows": float(len(tl)),
+            "preempted": float(self.n_preempted),
+            "queueing_ratio": self.queueing_ratio,
+        }
+
+
+class Simulation:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        # reset the global request-id counter so trajectories (tie-breaks
+        # in victim selection / sort stability) are reproducible no matter
+        # how many requests earlier simulations in this process created
+        import itertools as _it
+        import repro.serving.request as _rq
+        _rq._req_counter = _it.count()
+        self.rng = np.random.default_rng(cfg.seed)
+        hw = HardwareProfile(
+            decode_tok_per_s=cfg.cost.decode_tok_per_s(typical_batch=cfg.max_batch // 2),
+            kv_capacity_tokens=cfg.kv_capacity_tokens)
+        self.orch = Orchestrator(hardware=hw)
+        self.instances = [
+            SimInstance(i, cfg.cost, cfg.kv_capacity_tokens, max_batch=cfg.max_batch)
+            for i in range(cfg.n_instances)]
+        models = [InstanceModel(i.instance_id, cfg.kv_capacity_tokens)
+                  for i in self.instances]
+        self.scheduler, self.dispatcher, strict = self._make_policy(cfg.policy, models)
+        self.balancer = LoadBalancer(
+            self.scheduler, self.dispatcher, self.orch, self._submit,
+            strict_head=strict)
+        self.workflows: Dict[str, WorkflowState] = {}
+        self.finished_requests: List[Request] = []
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._eseq = itertools.count()
+        self._msg_counter = itertools.count()
+        self._balancer_armed = False
+
+    # ------------------------------------------------------------------ policy
+    def _make_policy(self, policy: str, models):
+        probe = lambda iid, req: self.instances[iid].can_admit(req)
+        if policy == "parrot":
+            # true Parrot: blind rotation, requests queue FIFO at instances
+            return FCFSScheduler(), RoundRobinDispatcher(models), False
+        if policy == "ayo":
+            return (TopoScheduler(self.orch.remaining_stages),
+                    RoundRobinDispatcher(models, probe), True)
+        if policy == "kairos":
+            return (KairosScheduler(self.orch.priority_score),
+                    TimeSlotDispatcher(models, admit_probe=probe), True)
+        if policy == "w/o-priority":
+            return FCFSScheduler(), TimeSlotDispatcher(models, admit_probe=probe), True
+        if policy == "w/o-packing":
+            # packing removed -> admission-gated rotation (priority retained)
+            return (KairosScheduler(self.orch.priority_score),
+                    RoundRobinDispatcher(models, probe), True)
+        if policy == "oracle":
+            def true_remaining(req: Request) -> float:
+                return req.true_output_len * self.cfg.cost.iteration_time(
+                    self.cfg.max_batch // 2, 0)
+            return (OracleScheduler(true_remaining),
+                    BestFitOracleDispatcher(models, probe), False)
+        raise ValueError(f"unknown policy {policy!r}")
+
+    # ------------------------------------------------------------------ events
+    def _push(self, t: float, kind: str, payload=None):
+        heapq.heappush(self._events, (t, next(self._eseq), kind, payload))
+
+    def _submit(self, iid: int, req: Request):
+        inst = self.instances[iid]
+        was_idle = not inst.has_work
+        inst.submit(req)
+        if was_idle or not inst.busy:
+            self._push(self._now, "instance_step", iid)
+            inst.busy = True
+
+    def _arm_balancer(self, t: float):
+        if not self._balancer_armed:
+            self._balancer_armed = True
+            self._push(t, "balancer", None)
+
+    # ------------------------------------------------------------------ agents
+    def _request_rng(self, wf: WorkflowState, agent: str) -> np.random.Generator:
+        """Deterministic per-(workflow, agent, hop) RNG so the sampled
+        workload is IDENTICAL across policies and across processes
+        (zlib.crc32 — python str hash() is salted per process)."""
+        key = zlib.crc32(
+            f"{self.cfg.seed}|{wf.msg_id}|{agent}|{wf.hops}".encode())
+        return np.random.default_rng(key)
+
+    def _spawn_request(self, wf: WorkflowState, agent: str,
+                       upstream: Optional[str], now: float):
+        prof = wf.app.agents[agent]
+        rng = self._request_rng(wf, agent)
+        req = Request(
+            agent_name=agent, msg_id=wf.msg_id, upstream_name=upstream,
+            app_name=wf.app.name,
+            prompt_len=prof.sample_prompt_len(rng),
+            true_output_len=prof.sample_output_len(rng),
+            max_new_tokens=10 ** 9,
+            arrival_time=now, app_start_time=wf.start_time)
+        wf.outstanding += 1
+        wf.hops += 1
+        wf.requests.append(req)
+        self.balancer.enqueue(req)
+        self._arm_balancer(now)
+
+    def _on_request_finished(self, req: Request, now: float):
+        wf = self.workflows[req.msg_id]
+        wf.outstanding -= 1
+        wf.total_tokens += req.output_len
+        self.finished_requests.append(req)
+        self.dispatcher.on_finish(req.instance_id, req.req_id)
+        self.orch.on_completion(CompletionRecord(
+            agent_name=req.agent_name, msg_id=req.msg_id,
+            upstream_name=req.upstream_name, app_name=req.app_name,
+            start_time=req.arrival_time, end_time=now,
+            prompt_len=req.prompt_len, output_len=req.output_len,
+            exec_start_time=req.exec_start_time))
+        downstream = wf.app.route(req.agent_name, self._request_rng(wf, req.agent_name), wf.hops)
+        for agent in downstream:
+            self._spawn_request(wf, agent, req.agent_name, now + AGENT_OVERHEAD)
+        if not downstream and wf.outstanding == 0:
+            wf.done_time = now
+            self.orch.on_workflow_complete(wf.msg_id)
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> SimResults:
+        cfg = self.cfg
+        # workflow arrivals, interleaving apps uniformly
+        arrivals = arrival_times(self.rng, cfg.rate, cfg.duration)
+        for t in arrivals:
+            self._push(float(t), "workflow_arrival", None)
+        self._now = 0.0
+
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            self._now = t
+            if kind == "workflow_arrival":
+                wf_idx = next(self._msg_counter)
+                app = cfg.apps[wf_idx % len(cfg.apps)]
+                msg_id = f"wf-{wf_idx}"
+                wf = WorkflowState(msg_id, app, t)
+                self.workflows[msg_id] = wf
+                self._spawn_request(wf, app.entry, None, t)
+            elif kind == "balancer":
+                self._balancer_armed = False
+                # OOM feedback from instances (§6 adaptive measure)
+                for inst in self.instances:
+                    if inst.recent_oom:
+                        inst.recent_oom = False
+                        self.dispatcher.on_oom(inst.instance_id, t)
+                self.balancer.tick(t)
+                if self.balancer.queued:
+                    self._arm_balancer(t + BALANCER_PERIOD)
+            elif kind == "instance_step":
+                inst = self.instances[payload]
+                finished, dt = inst.step(t)
+                if dt is None:
+                    inst.busy = False
+                else:
+                    for r in finished:
+                        self._on_request_finished(r, t + dt)
+                    self._push(t + dt, "instance_step", payload)
+                    if finished and self.balancer.queued:
+                        self._arm_balancer(t + dt)
+
+        # ---- metrics ---------------------------------------------------------
+        warm_t = cfg.duration * cfg.warmup_frac
+        wfs = [w for w in self.workflows.values()
+               if w.done_time >= 0 and w.start_time >= warm_t]
+        reqs = [r for r in self.finished_requests if r.arrival_time >= warm_t]
+        qsum = sum(max(r.queueing_time(), 0.0) for r in reqs if not math.isnan(r.queueing_time()))
+        esum = sum(r.e2e_latency for r in reqs if r.finish_time >= 0)
+        return SimResults(
+            workflows=wfs,
+            requests=reqs,
+            n_preempted=sum(i.n_preempted for i in self.instances),
+            queueing_ratio=qsum / max(esum, 1e-9),
+            policy=cfg.policy,
+        )
+
+
+def run_policy(apps, policy: str, **kw) -> SimResults:
+    cfg = SimConfig(apps=apps, policy=policy, **kw)
+    return Simulation(cfg).run()

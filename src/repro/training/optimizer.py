@@ -1,0 +1,124 @@
+"""Optimizers: Adam (<=34B models) and Adafactor (trillion-param MoE).
+
+Pure-pytree implementations; optimizer states mirror the parameter tree so
+the sharding rules (models/sharding.py) apply uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    name: str = "adam"
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    name: str = "adafactor"
+
+
+def adam_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def adam_update(cfg: AdamConfig, params, grads, state, step):
+    t = (step + 1).astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m2 / (1 - cfg.b1 ** t)
+        vh = v2 / (1 - cfg.b2 ** t)
+        delta = cfg.lr * mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}
+
+
+def adafactor_init(params):
+    """Factored second moment: (row, col) factors for >=2D leaves, full for
+    vectors.  Stored as parallel trees keyed identically to params."""
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else jnp.zeros((1,), jnp.float32)
+
+    def vc(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if p.ndim >= 2 else jnp.zeros(p.shape, jnp.float32))
+
+    return {"vr": jax.tree.map(vr, params), "vc": jax.tree.map(vc, params)}
+
+
+def adafactor_update(cfg: AdafactorConfig, params, grads, state, step):
+    t = (step + 1).astype(jnp.float32)
+    beta = 1.0 - t ** (-cfg.decay)
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + cfg.eps
+        if p.ndim >= 2:
+            vr2 = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc2 = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr2, axis=-1, keepdims=True), cfg.eps)
+            vhat = vr2[..., :, None] * vc2[..., None, :] / denom[..., None]
+        else:
+            vr2, vc2 = vr, beta * vc + (1 - beta) * g2
+            vhat = vc2
+        update = g / jnp.sqrt(vhat + cfg.eps)
+        norm = jnp.sqrt(jnp.mean(jnp.square(update)))
+        update = update / jnp.maximum(1.0, norm / cfg.clip_threshold)
+        return (p.astype(jnp.float32) - cfg.lr * update).astype(p.dtype), vr2, vc2
+
+    out = jax.tree.map(upd, params, grads, state["vr"], state["vc"])
+    is_t = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda o: o[0], out, is_leaf=is_t),
+            {"vr": jax.tree.map(lambda o: o[1], out, is_leaf=is_t),
+             "vc": jax.tree.map(lambda o: o[2], out, is_leaf=is_t)})
+
+
+def make_optimizer(kind: str):
+    if kind == "adam":
+        cfg = AdamConfig()
+        return cfg, adam_init, lambda p, g, s, t: adam_update(cfg, p, g, s, t)
+    cfg = AdafactorConfig()
+    return cfg, adafactor_init, lambda p, g, s, t: adafactor_update(cfg, p, g, s, t)
+
+
+def make_train_step(model, opt_kind: str = "adam"):
+    """Returns (init_state(key), train_step(state, batch) -> (state, metrics))."""
+    _, opt_init, opt_update = make_optimizer(opt_kind)
+
+    def init_state(key):
+        params = model.init_params(key)
+        return {"params": params, "opt": opt_init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state["params"], batch)
+        new_params, new_opt = opt_update(state["params"], grads, state["opt"], state["step"])
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, {"loss": loss, **metrics}
+
+    return init_state, train_step

@@ -1,0 +1,224 @@
+"""Unit tests for the Kairos core: distributions, workflow analysis,
+MDS priority, memory model, dispatchers, schedulers."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BestFitOracleDispatcher,
+    ConvergenceTracker,
+    DistributionProfiler,
+    EmpiricalDistribution,
+    FCFSScheduler,
+    InstanceModel,
+    KairosScheduler,
+    RoundRobinDispatcher,
+    TimeSlotDispatcher,
+    TopoScheduler,
+    WorkflowAnalyzer,
+    agent_priorities,
+    classical_mds_1d,
+    make_ramp,
+    wasserstein_1d,
+)
+from repro.serving.request import CompletionRecord, Request
+
+rng = np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------------- #
+# distributions
+# --------------------------------------------------------------------------- #
+def test_wasserstein_basics():
+    a = rng.normal(10, 1, 500)
+    assert wasserstein_1d(a, a) < 1e-9
+    b = a + 5.0
+    assert abs(wasserstein_1d(a, b) - 5.0) < 0.1
+    assert wasserstein_1d(a, b) == pytest.approx(wasserstein_1d(b, a))
+
+
+def test_convergence_tracker_converges_on_stationary_stream():
+    tr = ConvergenceTracker(threshold=0.15)
+    samples = []
+    for x in rng.normal(2.0, 0.3, 600):
+        samples.append(float(x))
+        tr.observe(samples)
+    assert tr.converged
+
+
+def test_convergence_tracker_not_converged_on_drift():
+    tr = ConvergenceTracker(threshold=0.02)
+    samples = list(rng.normal(1.0, 0.1, 64))
+    tr.observe(samples)
+    samples += list(rng.normal(50.0, 0.1, 64))   # drastic shift at the doubling point
+    tr.observe(samples)
+    assert not tr.converged
+
+
+def test_mode_estimate():
+    d = EmpiricalDistribution(list(rng.normal(5, 0.5, 400)) + list(rng.normal(20, 3, 50)))
+    assert 3.5 < d.mode() < 6.5   # dominant mode, robust to the tail
+
+
+# --------------------------------------------------------------------------- #
+# workflow analysis (§4.2): parallel vs sequential fan-out via sweep-line
+# --------------------------------------------------------------------------- #
+def _rec(agent, msg, up, app, t0, t1, out=10):
+    return CompletionRecord(agent_name=agent, msg_id=msg, upstream_name=up,
+                            app_name=app, start_time=t0, end_time=t1,
+                            prompt_len=16, output_len=out)
+
+
+def test_parallel_fanout_detected():
+    wa = WorkflowAnalyzer()
+    for i in range(4):
+        m = f"m{i}"
+        wa.add_record(_rec("A", m, None, "app", 0, 1))
+        wa.add_record(_rec("B", m, "A", "app", 1.1, 3))    # B,C overlap
+        wa.add_record(_rec("C", m, "A", "app", 1.2, 2.5))
+        wa.finalize_trace(m)
+    g = wa.graphs["app"]
+    assert g.edge_kind("A", "B") == "parallel"
+    assert g.edge_kind("A", "C") == "parallel"
+
+
+def test_sequential_fanout_detected():
+    wa = WorkflowAnalyzer()
+    for i in range(4):
+        m = f"s{i}"
+        wa.add_record(_rec("A", m, None, "app", 0, 1))
+        wa.add_record(_rec("B", m, "A", "app", 1.1, 2.0))  # disjoint spans
+        wa.add_record(_rec("C", m, "A", "app", 2.1, 3.0))
+        wa.finalize_trace(m)
+    g = wa.graphs["app"]
+    assert g.edge_kind("A", "B") == "sequential"
+    assert g.edge_kind("A", "C") == "sequential"
+    # remaining-stage topology: A -> {B, C} sinks
+    assert g.remaining_stages("A") == 2
+    assert g.remaining_stages("B") == 1
+
+
+def test_remaining_latency_samples():
+    wa = WorkflowAnalyzer()
+    wa.add_record(_rec("A", "x", None, "app", 0, 1))
+    wa.add_record(_rec("B", "x", "A", "app", 1, 5))
+    wa.finalize_trace("x")
+    assert wa.remaining_samples("app", "A") == [5.0]   # from A's start to end
+    assert wa.remaining_samples("app", "B") == [4.0]
+
+
+# --------------------------------------------------------------------------- #
+# MDS priority (§5.1)
+# --------------------------------------------------------------------------- #
+def test_mds_recovers_line():
+    pts = np.array([0.0, 1.0, 4.0, 9.0])
+    d = np.abs(pts[:, None] - pts[None, :])
+    c = classical_mds_1d(d)
+    # pairwise distances preserved up to sign/offset
+    d2 = np.abs(c[:, None] - c[None, :])
+    np.testing.assert_allclose(d2, d, atol=1e-8)
+
+
+def test_agent_priorities_order_matches_remaining_latency():
+    samples = {
+        ("app", "fast"): list(rng.normal(1.0, 0.1, 200)),
+        ("app", "mid"): list(rng.normal(5.0, 0.5, 200)),
+        ("app", "slow"): list(rng.normal(20.0, 2.0, 200)),
+    }
+    pr = agent_priorities(samples)
+    assert pr[("app", "fast")] < pr[("app", "mid")] < pr[("app", "slow")]
+    # anchor orientation: fast agent is closest to zero-latency anchor
+    assert pr[("app", "fast")] >= 0
+
+
+# --------------------------------------------------------------------------- #
+# schedulers (§5)
+# --------------------------------------------------------------------------- #
+def _q(agent, arr, app_start, app="app"):
+    return Request(agent_name=agent, msg_id=f"{agent}{arr}", app_name=app,
+                   arrival_time=arr, app_start_time=app_start, prompt_len=8)
+
+
+def test_kairos_scheduler_inter_and_intra_agent_order():
+    score = {"fast": 0.0, "slow": 10.0}
+    sched = KairosScheduler(lambda app, a: score[a])
+    q = [_q("slow", 0.0, 0.0), _q("fast", 1.0, 0.9), _q("fast", 0.5, 0.1)]
+    ordered = sched.order(q)
+    assert [r.agent_name for r in ordered] == ["fast", "fast", "slow"]
+    # intra-agent: earlier application-level start first (§5.2)
+    assert ordered[0].app_start_time == 0.1
+
+
+def test_fcfs_scheduler():
+    sched = FCFSScheduler()
+    q = [_q("a", 2.0, 0), _q("b", 1.0, 0)]
+    assert [r.arrival_time for r in sched.order(q)] == [1.0, 2.0]
+
+
+def test_topo_scheduler():
+    stages = {"early": 3, "late": 1}
+    sched = TopoScheduler(lambda app, a: stages[a])
+    q = [_q("early", 0.0, 0), _q("late", 1.0, 0)]
+    assert [r.agent_name for r in sched.order(q)] == ["late", "early"]
+
+
+# --------------------------------------------------------------------------- #
+# memory model + dispatcher (§6)
+# --------------------------------------------------------------------------- #
+def test_memory_ramp():
+    ramp = make_ramp(prompt_len=100, expected_exec_time=10.0,
+                     decode_tok_per_s=20.0, t_start=0.0)
+    assert ramp.usage(-1) == 0
+    assert ramp.usage(5.0) == pytest.approx(200.0)
+    assert ramp.peak == pytest.approx(300.0)
+    assert ramp.usage(11.0) == 0
+
+
+def test_ssm_ramp_is_flat():
+    ramp = make_ramp(100, 10.0, 20.0, 0.0, kv_ratio=0.0, state_tokens=64.0)
+    assert ramp.usage(5.0) == pytest.approx(64.0)
+    assert ramp.peak == pytest.approx(64.0)
+
+
+def test_timeslot_dispatcher_picks_min_peak_and_respects_capacity():
+    insts = [InstanceModel(0, capacity_tokens=1000),
+             InstanceModel(1, capacity_tokens=1000)]
+    disp = TimeSlotDispatcher(insts)
+    r1, r2, r3 = (_q("a", i, i) for i in range(3))
+    big = make_ramp(700, 10, 10, 0.0)
+    small = make_ramp(100, 10, 10, 0.0)
+    assert disp.dispatch(r1, big, 0.0) in (0, 1)
+    first = r1.req_id in disp.instances[0].ramps
+    # second big request must go to the other instance (load balance by peak)
+    iid2 = disp.dispatch(r2, big, 0.0)
+    assert iid2 == (1 if first else 0)
+    # a third big one doesn't fit anywhere -> rejected
+    r4 = _q("a", 4, 4)
+    assert disp.dispatch(r4, make_ramp(700, 10, 10, 0.0), 0.0) is None
+    # but a small one still fits
+    assert disp.dispatch(r3, small, 0.0) is not None
+
+
+def test_timeslot_dispatcher_time_release():
+    insts = [InstanceModel(0, capacity_tokens=500)]
+    disp = TimeSlotDispatcher(insts)
+    r1, r2 = _q("a", 0, 0), _q("a", 1, 1)
+    assert disp.dispatch(r1, make_ramp(400, 2.0, 0, 0.0), 0.0) == 0
+    # overlapping in time -> rejected
+    assert disp.dispatch(r2, make_ramp(400, 2.0, 0, 0.5), 0.5) is None
+    # after r1's expected end, slots are free again
+    assert disp.dispatch(r2, make_ramp(400, 2.0, 0, 3.0), 3.0) == 0
+
+
+def test_oom_fencing():
+    insts = [InstanceModel(0, 1000), InstanceModel(1, 1000)]
+    disp = TimeSlotDispatcher(insts, oom_cooldown=5.0)
+    disp.on_oom(0, now=0.0)
+    r = _q("a", 0, 0)
+    assert disp.dispatch(r, make_ramp(10, 1, 1, 0.0), 0.0) == 1  # 0 is fenced
+
+
+def test_round_robin_rotation():
+    insts = [InstanceModel(i, 1e9) for i in range(3)]
+    disp = RoundRobinDispatcher(insts)
+    ids = [disp.dispatch(_q("a", i, i), make_ramp(1, 1, 1, 0), 0.0) for i in range(6)]
+    assert ids == [0, 1, 2, 0, 1, 2]

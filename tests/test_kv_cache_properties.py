@@ -1,0 +1,91 @@
+"""Property-based tests (hypothesis): BlockManager invariants and the
+time-slot memory model (Eqs. 1–3)."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.dispatcher import _slot_usage_matrix
+from repro.core.memory_model import make_ramp
+from repro.serving.kv_cache import BlockManager, NoFreeBlocks
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    num_blocks=st.integers(4, 64),
+    block_size=st.integers(1, 32),
+    ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "grow", "free"]),
+                  st.integers(0, 7),            # seq id
+                  st.integers(1, 256)),         # token count
+        max_size=40),
+)
+def test_block_manager_invariants(num_blocks, block_size, ops):
+    bm = BlockManager(num_blocks, block_size)
+    tokens = {}
+    for op, seq, n in ops:
+        if op == "free":
+            bm.free(seq)
+            tokens.pop(seq, None)
+        else:
+            want = tokens.get(seq, 0) + n if op == "grow" else n
+            try:
+                table = bm.allocate(seq, want)
+            except NoFreeBlocks:
+                continue
+            tokens[seq] = max(tokens.get(seq, 0), want)
+            assert len(table) == bm.blocks_needed(max(tokens[seq], want)) or \
+                len(table) >= bm.blocks_needed(want)
+        # invariant 1: conservation
+        assert bm.free_blocks + bm.used_blocks == num_blocks
+        # invariant 2: no block owned twice
+        owned = [b for s in bm.owned_seqs() for b in bm.block_table(s)]
+        assert len(owned) == len(set(owned))
+        # invariant 3: free list disjoint from owned
+        assert not (set(owned) & set(bm._free))
+    # free everything -> all blocks returned
+    for s in list(bm.owned_seqs()):
+        bm.free(s)
+    assert bm.free_blocks == num_blocks
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    prompt=st.integers(1, 2000),
+    exec_t=st.floats(0.01, 100.0),
+    speed=st.floats(0.1, 200.0),
+    t0=st.floats(0.0, 50.0),
+    slot_len=st.floats(0.05, 2.0),
+)
+def test_ramp_slot_bounds(prompt, exec_t, speed, t0, slot_len):
+    """Slot usage is monotone, bounded by the ramp peak, and zero outside."""
+    ramp = make_ramp(prompt, exec_t, speed, t0)
+    starts = np.arange(0.0, t0 + exec_t + 3 * slot_len, slot_len)
+    usage = _slot_usage_matrix([ramp], starts, slot_len)[0]
+    assert np.all(usage >= 0.0)
+    assert np.all(usage <= ramp.peak + 1e-6)
+    # slots entirely before start or after end are zero
+    before = starts + slot_len <= ramp.t_start
+    after = starts >= ramp.t_end
+    assert np.all(usage[before] == 0.0)
+    assert np.all(usage[after] == 0.0)
+    # active usage is non-decreasing (linear growth)
+    active = usage[~(before | after)]
+    act = active[active > 0]
+    assert np.all(np.diff(act) >= -1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_slot_matrix_superposition(data):
+    """Eq. 3: F_j(t) = sum_i f_i(t) — matrix rows sum linearly."""
+    n = data.draw(st.integers(1, 6))
+    ramps = [make_ramp(data.draw(st.integers(1, 500)),
+                       data.draw(st.floats(0.1, 20.0)),
+                       data.draw(st.floats(0.1, 50.0)),
+                       data.draw(st.floats(0.0, 10.0))) for _ in range(n)]
+    starts = np.arange(0.0, 40.0, 0.5)
+    mat = _slot_usage_matrix(ramps, starts, 0.5)
+    total = _slot_usage_matrix(ramps, starts, 0.5).sum(0)
+    np.testing.assert_allclose(mat.sum(0), total)
+    singles = sum(_slot_usage_matrix([r], starts, 0.5)[0] for r in ramps)
+    np.testing.assert_allclose(total, singles, rtol=1e-9)

@@ -1,0 +1,47 @@
+"""Property-based tests on workflow analysis and the priority embedding."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import assume, given, settings
+
+from repro.core.priority import agent_priorities, classical_mds_1d
+from repro.core.workflow import _sweepline_parallel
+
+
+@settings(max_examples=80, deadline=None)
+@given(spans=st.lists(
+    st.tuples(st.floats(0, 100), st.floats(0.01, 20)), min_size=2, max_size=8))
+def test_sweepline_matches_bruteforce(spans):
+    spans = [(f"a{i}", s, s + d) for i, (s, d) in enumerate(spans)]
+    got = _sweepline_parallel(spans)
+    expect = set()
+    for i, (ni, si, ei) in enumerate(spans):
+        for j, (nj, sj, ej) in enumerate(spans):
+            if i != j and si < ej and sj < ei:
+                expect.add(ni)
+                expect.add(nj)
+    assert got == expect
+
+
+@settings(max_examples=30, deadline=None)
+@given(means=st.lists(st.floats(0.1, 100.0), min_size=2, max_size=8, unique=True))
+def test_priority_order_matches_mean_remaining(means):
+    """For well-separated unimodal distributions, the MDS priority order
+    must equal the order of mean remaining latency."""
+    ms = sorted(means)
+    assume(all(b / a >= 1.2 for a, b in zip(ms, ms[1:])))  # well-separated
+    rng = np.random.default_rng(0)
+    samples = {("app", f"a{i}"): (rng.normal(m, 0.01 * m, 128)).tolist()
+               for i, m in enumerate(means)}
+    pr = agent_priorities(samples)
+    order_by_priority = sorted(range(len(means)), key=lambda i: pr[("app", f"a{i}")])
+    order_by_mean = sorted(range(len(means)), key=lambda i: means[i])
+    assert order_by_priority == order_by_mean
+
+
+@settings(max_examples=30, deadline=None)
+@given(pts=st.lists(st.floats(-50, 50), min_size=2, max_size=10))
+def test_mds_preserves_line_distances(pts):
+    pts = np.asarray(pts)
+    d = np.abs(pts[:, None] - pts[None, :])
+    c = classical_mds_1d(d)
+    np.testing.assert_allclose(np.abs(c[:, None] - c[None, :]), d, atol=1e-6)
