@@ -31,12 +31,13 @@ def main() -> None:
         fig18_ablation,
         kernel_bench,
         overhead,
+        prefix_reuse,
     )
 
     modules = [fig03_agent_profiles, fig07_queuing_example, fig08_rank_correlation,
                fig09_dispatch_preemption, fig14_single_app, fig15_colocated,
                fig16_sorting_accuracy, fig17_larger_llm, fig18_ablation,
-               overhead, kernel_bench]
+               overhead, kernel_bench, prefix_reuse]
 
     print("name,us_per_call,derived")
     failures = 0

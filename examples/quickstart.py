@@ -7,15 +7,20 @@ import sys
 
 from repro.agents import BaseAgent, Workflow
 
-ROUTER_PROMPT = "You're a router assistant. Classify the question: {q}"
-MATH_PROMPT = "You're a math expert. Solve step by step: {q}"
-HUM_PROMPT = "You're a humanities expert. Answer with context: {q}"
+# Each agent's fixed preamble is declared as a ``system_prompt``: with
+# ``prefix_caching=True`` its KV is computed once per instance and shared
+# across every call (see src/repro/serving/prefix_cache.py).
+ROUTER_SYS = "You're a router assistant. Classify the incoming question into math or humanities."
+MATH_SYS = "You're a math expert. Solve the problem step by step, showing your work."
+HUM_SYS = "You're a humanities expert. Answer with historical and cultural context."
 
 
 class Router(BaseAgent):
+    system_prompt = ROUTER_SYS
+
     def _run_impl(self, input_data, metadata):
         q = input_data["question"]
-        prompt = self.encode_prompt(ROUTER_PROMPT.format(q=q), length=12)
+        prompt = self.encode_prompt(q, length=12)
         result = self.generate(prompt, metadata, max_new_tokens=2)
         # route by content (synthetic: parity of the first generated token)
         next_agent = "MathAgent" if (result and result[0] % 2 == 0) else "HumanitiesAgent"
@@ -23,21 +28,28 @@ class Router(BaseAgent):
 
 
 class MathAgent(BaseAgent):
+    system_prompt = MATH_SYS
+
     def _run_impl(self, input_data, metadata):
-        prompt = self.encode_prompt(MATH_PROMPT.format(q=input_data["question"]), length=20)
+        prompt = self.encode_prompt(input_data["question"], length=20)
         result = self.generate(prompt, metadata, max_new_tokens=10)
         return {"answer": result, "by": self.name}, None
 
 
 class HumanitiesAgent(BaseAgent):
+    system_prompt = HUM_SYS
+
     def _run_impl(self, input_data, metadata):
-        prompt = self.encode_prompt(HUM_PROMPT.format(q=input_data["question"]), length=28)
+        prompt = self.encode_prompt(input_data["question"], length=28)
         result = self.generate(prompt, metadata, max_new_tokens=16)
         return {"answer": result, "by": self.name}, None
 
 
 def main():
-    wf = Workflow(app_name="QA", n_instances=1, num_blocks=128, block_size=8)
+    # prefix_caching: shared-prefix KV reuse across agent calls (the knob
+    # also teaches the dispatcher's memory ramps about the discount)
+    wf = Workflow(app_name="QA", n_instances=1, num_blocks=128, block_size=8,
+                  prefix_caching=True)
     wf.add_engine("vllm-0", model="qwen3-1.7b")           # reduced variant on CPU
     wf.add_agent("Router", Router, use_model="qwen3-1.7b")
     wf.add_agent("MathAgent", MathAgent, use_model="qwen3-1.7b")
@@ -60,6 +72,11 @@ def main():
     print("\nworkflow-aware priorities (lower = scheduled first):")
     for k, v in sorted(wf.orch.priorities.scores.items(), key=lambda kv: kv[1]):
         print(f"  {k[1]:18s} {v:.3f}")
+
+    pc = wf.prefix_cache_stats()
+    print(f"\nprefix cache: {pc['prefill_tokens_saved']} of "
+          f"{pc['prefill_tokens'] + pc['prefill_tokens_saved']} prompt tokens "
+          f"served from shared KV ({pc['savings']:.0%} prefill saved)")
     ok = len(results) == len(ids)
     print("\nQUICKSTART", "OK" if ok else "INCOMPLETE")
     return 0 if ok else 1

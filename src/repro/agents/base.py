@@ -32,15 +32,37 @@ from repro.serving.request import CompletionRecord, Request
 
 class BaseAgent:
     """Subclass and override ``_run_impl(input_data, metadata)``; return
-    ``(output_payload, next_agent_name_or_None)``."""
+    ``(output_payload, next_agent_name_or_None)``.
+
+    ``system_prompt`` (class attribute or ``add_agent`` argument) declares
+    the agent's fixed preamble.  It is prepended to every ``generate``
+    call and flagged as a shareable prefix, so engines with prefix caching
+    serve its KV from shared pages instead of re-prefilling it, and the
+    dispatcher's memory ramps stop double-counting it."""
+
+    system_prompt: str = ""
 
     def __init__(self, name: str, workflow: "Workflow"):
         self.name = name
         self.workflow = workflow
+        self._sys_tokens: Optional[np.ndarray] = None
+
+    def system_prompt_tokens(self) -> np.ndarray:
+        if self._sys_tokens is None:
+            self._sys_tokens = (self.encode_prompt(self.system_prompt)
+                                if self.system_prompt
+                                else np.zeros((0,), np.int32))
+        return self._sys_tokens
 
     # -- LLM access (Listing 1: ``self.generate``) ---------------------------
     def generate(self, prompt_tokens, metadata: Headers, max_new_tokens: int = 16) -> List[int]:
-        return self.workflow._llm_call(self.name, prompt_tokens, metadata, max_new_tokens)
+        sys_toks = self.system_prompt_tokens()
+        shared = len(sys_toks)
+        if shared:
+            prompt_tokens = np.concatenate(
+                [sys_toks, np.asarray(prompt_tokens, np.int32)])
+        return self.workflow._llm_call(self.name, prompt_tokens, metadata,
+                                       max_new_tokens, shared_prefix_len=shared)
 
     def encode_prompt(self, text: str, length: Optional[int] = None) -> np.ndarray:
         """Deterministic synthetic tokenizer stand-in."""
@@ -57,11 +79,14 @@ class Workflow:
     Kairos load balancer over real paged-KV engine instances."""
 
     def __init__(self, app_name: str = "app", n_instances: int = 1,
-                 num_blocks: int = 128, block_size: int = 8, max_batch: int = 4):
+                 num_blocks: int = 128, block_size: int = 8, max_batch: int = 4,
+                 prefix_caching: bool = False):
         self.app_name = app_name
+        self.prefix_caching = prefix_caching
         self.bus = MessageBus()
         self.orch = Orchestrator(hardware=HardwareProfile(
-            decode_tok_per_s=20.0, kv_capacity_tokens=num_blocks * block_size))
+            decode_tok_per_s=20.0, kv_capacity_tokens=num_blocks * block_size),
+            prefix_caching=prefix_caching)
         self.agents: Dict[str, BaseAgent] = {}
         self.engines: List[LLMEngine] = []
         self._engine_cfg = (n_instances, num_blocks, block_size, max_batch)
@@ -88,7 +113,8 @@ class Workflow:
         for i in range(n):
             runner = PagedModelRunner(m, params, num_blocks=blocks,
                                       block_size=bs, max_batch=mb)
-            self.engines.append(LLMEngine(runner, instance_id=i, max_batch=mb))
+            self.engines.append(LLMEngine(runner, instance_id=i, max_batch=mb,
+                                          enable_prefix_cache=self.prefix_caching))
         models = [InstanceModel(i, blocks * bs) for i in range(n)]
         probe = lambda iid, req: (
             len(self.engines[iid].running) + len(self.engines[iid].waiting)
@@ -99,19 +125,23 @@ class Workflow:
             self.orch,
             lambda iid, req: self.engines[iid].submit(req))
 
-    def add_agent(self, agent_name: str, agent_class, use_model: str = ""):
+    def add_agent(self, agent_name: str, agent_class, use_model: str = "",
+                  system_prompt: Optional[str] = None):
         agent = agent_class(agent_name, self)
+        if system_prompt is not None:
+            agent.system_prompt = system_prompt
         self.agents[agent_name] = agent
         self.bus.subscribe(agent_name, self._on_message)
 
     # ------------------------------------------------------------------ llm
     def _llm_call(self, agent_name: str, prompt_tokens, metadata: Headers,
-                  max_new_tokens: int) -> List[int]:
+                  max_new_tokens: int, shared_prefix_len: int = 0) -> List[int]:
         req = Request(
             agent_name=agent_name, msg_id=metadata.msg_id,
             upstream_name=metadata.upstream_name, app_name=metadata.app_name,
             prompt_len=len(prompt_tokens), prompt_tokens=np.asarray(prompt_tokens),
             max_new_tokens=max_new_tokens,
+            shared_prefix_len=shared_prefix_len, cache_key=agent_name,
             arrival_time=time.monotonic(), app_start_time=metadata.app_start_time)
         ev = threading.Event()
         box: list = []
@@ -140,6 +170,14 @@ class Workflow:
         t.start()
         self._threads.append(t)
 
+    def prefix_cache_stats(self) -> dict:
+        """Aggregate prefill-token savings across engine instances."""
+        total = sum(e.stats.prefill_tokens for e in self.engines)
+        saved = sum(e.stats.prefill_tokens_saved for e in self.engines)
+        return {"prefill_tokens": total, "prefill_tokens_saved": saved,
+                "kv_cached_tokens": sum(e.kv_cached_tokens for e in self.engines),
+                "savings": saved / max(total + saved, 1)}
+
     # ------------------------------------------------------------------ run
     def submit_task(self, entry_agent: str, input_data: dict) -> str:
         msg_id = self.bus.new_msg_id(self.app_name)
@@ -158,6 +196,9 @@ class Workflow:
             with self._lock:
                 if self._outstanding == 0 and self._submissions.empty():
                     break
+            # prune finished agent threads (long-lived workflows would
+            # otherwise accumulate one dead Thread object per message)
+            self._threads = [t for t in self._threads if t.is_alive()]
             self.bus.drain()
             while not self._submissions.empty():
                 req, ev, box = self._submissions.get()

@@ -61,8 +61,9 @@ class LoadBalancer:
             self.n_scheduled += 1
             if len(dispatched) >= self.max_dispatch_per_tick:
                 break
-        for req in dispatched:
-            self.queue.remove(req)
+        if dispatched:
+            gone = {r.req_id for r in dispatched}
+            self.queue = [r for r in self.queue if r.req_id not in gone]
 
     @property
     def queued(self) -> int:

@@ -48,12 +48,21 @@ class MemoryRamp:
 
 
 def make_ramp(prompt_len: int, expected_exec_time: float, decode_tok_per_s: float,
-              t_start: float, kv_ratio: float = 1.0, state_tokens: float = 0.0) -> MemoryRamp:
+              t_start: float, kv_ratio: float = 1.0, state_tokens: float = 0.0,
+              shared_prefix_tokens: int = 0) -> MemoryRamp:
     """kv_ratio: fraction of layers holding KV (1.0 dense, 4/32 jamba,
     0.0 rwkv); state_tokens: constant recurrent-state footprint expressed
-    in KV-token-equivalents."""
+    in KV-token-equivalents.
+
+    ``shared_prefix_tokens``: prompt tokens expected to be served by the
+    engine's shared-prefix KV cache (``serving/prefix_cache.py``).  Their
+    pages are held once per instance, not once per request, so per-request
+    ramps must not count them — otherwise the time-slot dispatcher
+    double-counts the shared pages for every concurrent agent call and
+    under-packs the instance."""
+    eff_prompt = max(prompt_len - max(shared_prefix_tokens, 0), 1)
     return MemoryRamp(
-        p_tokens=prompt_len * kv_ratio + state_tokens,
+        p_tokens=eff_prompt * kv_ratio + state_tokens,
         slope=decode_tok_per_s * kv_ratio,
         t_start=t_start,
         t_end=t_start + max(expected_exec_time, 1e-6),

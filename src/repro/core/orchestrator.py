@@ -32,12 +32,16 @@ class ArchMemoryTraits:
 class Orchestrator:
     def __init__(self, hardware: Optional[HardwareProfile] = None,
                  arch_traits: Optional[ArchMemoryTraits] = None,
-                 priority_refresh: int = 64):
+                 priority_refresh: int = 64,
+                 prefix_caching: bool = False):
         self.hw = hardware or HardwareProfile()
         self.traits = arch_traits or ArchMemoryTraits()
         self.analyzer = WorkflowAnalyzer()
         self.profiler = DistributionProfiler()
         self.priorities = PriorityTable(interval=priority_refresh)
+        # engines run the shared-prefix KV cache: memory ramps discount the
+        # declared shared prefix so the dispatcher doesn't double-count it
+        self.prefix_caching = prefix_caching
 
     # ------------------------------------------------------------------ intake
     def on_completion(self, rec: CompletionRecord):
@@ -82,4 +86,6 @@ class Orchestrator:
             t_start=now,
             kv_ratio=self.traits.kv_ratio,
             state_tokens=self.traits.state_tokens,
+            shared_prefix_tokens=(req.shared_prefix_len
+                                  if self.prefix_caching else 0),
         )

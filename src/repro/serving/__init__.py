@@ -1,6 +1,8 @@
 from repro.serving.engine import LLMEngine, PagedModelRunner
 from repro.serving.kv_cache import BlockManager, NoFreeBlocks
+from repro.serving.prefix_cache import PrefixCache, PrefixCacheStats
 from repro.serving.request import CompletionRecord, Request, RequestState
 
 __all__ = ["LLMEngine", "PagedModelRunner", "BlockManager", "NoFreeBlocks",
+           "PrefixCache", "PrefixCacheStats",
            "CompletionRecord", "Request", "RequestState"]

@@ -28,6 +28,7 @@ from repro.models.layers import embed_tokens, lm_logits, rms_norm, swiglu
 from repro.models.model import LanguageModel
 from repro.models.moe import moe_ffn
 from repro.serving.kv_cache import BlockManager, NoFreeBlocks
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, RequestState
 
 
@@ -58,6 +59,7 @@ class PagedModelRunner:
             model.dtype)
         self._decode_fn = self._build_decode()
         self._prefill_fn = jax.jit(self.model.prefill)
+        self._suffix_fn = self._build_suffix_prefill()
 
     # -- prefill: run the model once, scatter its contiguous KV into pages ---
     def prefill(self, tokens: jnp.ndarray, block_table: List[int]):
@@ -73,6 +75,80 @@ class PagedModelRunner:
         bt = jnp.asarray(block_table[:nb], jnp.int32)
         self.pool = self.pool.at[:, :, bt].set(kv)
         return logits[0]
+
+    # -- suffix prefill: reuse cached prefix KV, compute only new tokens ------
+    def prefill_suffix(self, tokens: jnp.ndarray, block_table: List[int],
+                       n_cached: int):
+        """tokens (S,) = the uncached suffix; block_table covers the whole
+        prompt (cached prefix blocks first).  The suffix attends to the
+        prefix KV already resident in the pool; only suffix KV is written.
+        ``n_cached`` must be a positive multiple of block_size (the prefix
+        cache only shares full blocks)."""
+        s = tokens.shape[0]
+        bs = self.block_size
+        assert n_cached > 0 and n_cached % bs == 0 and s > 0
+        nbp = n_cached // bs
+        nb_total = -(-(n_cached + s) // bs)
+        prefix_bt = jnp.asarray(block_table[:nbp], jnp.int32)
+        suffix_bt = jnp.asarray(block_table[nbp:nb_total], jnp.int32)
+        logits, self.pool = self._suffix_fn(
+            self.params, self.pool, jnp.asarray(tokens, jnp.int32),
+            prefix_bt, suffix_bt)
+        return logits
+
+    def copy_block(self, src: int, dst: int):
+        """Copy-on-write data path: duplicate one physical block."""
+        self.pool = self.pool.at[:, :, dst].set(self.pool[:, :, src])
+
+    def _build_suffix_prefill(self):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        bs = self.block_size
+
+        def step(params, pool, tokens, prefix_bt, suffix_bt):
+            s = tokens.shape[0]
+            p_len = prefix_bt.shape[0] * bs
+            nbs = suffix_bt.shape[0]
+            positions = p_len + jnp.arange(s, dtype=jnp.int32)
+            sin, cos = attn_mod.rope_at(positions, hd, cfg.rope_theta)
+            k_pos = jnp.arange(p_len + s, dtype=jnp.int32)
+            bias = jnp.where(positions[:, None] >= k_pos[None, :],
+                             0.0, attn_mod.NEG_INF)[None, None, None]
+            x = embed_tokens(params, tokens[None]).astype(pool.dtype)  # (1,S,d)
+
+            def body(xx, xs):
+                lp, pool_layer = xs
+                h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+                q, k, v = attn_mod._project_qkv(lp["attn"], h, h, cfg)
+                q = attn_mod.apply_rope(q, sin, cos)
+                k = attn_mod.apply_rope(k, sin, cos)
+                # prefix K/V: gather cached pages (already rope'd at write)
+                pk = pool_layer[0][prefix_bt].reshape(p_len, cfg.num_kv_heads, hd)
+                pv = pool_layer[1][prefix_bt].reshape(p_len, cfg.num_kv_heads, hd)
+                kf = jnp.concatenate([pk[None], k], axis=1)   # (1, P+S, kv, hd)
+                vf = jnp.concatenate([pv[None], v], axis=1)
+                scores = attn_mod._gqa_scores(q, kf)
+                probs = jax.nn.softmax(scores + bias, axis=-1)
+                o = attn_mod._gqa_out(probs, vf).reshape(1, s, -1)
+                xx = xx + jnp.einsum("bse,ed->bsd", o, lp["attn"]["wo"])
+                h2 = rms_norm(xx, lp["ln2"], cfg.norm_eps)
+                if "moe" in lp:
+                    f, _ = moe_ffn(lp["moe"], h2, cfg)
+                else:
+                    f = swiglu(h2, **lp["ffn"])
+                return xx + f, jnp.stack([k[0], v[0]])        # (2, S, kv, hd)
+
+            x, kvs = jax.lax.scan(body, x, (params["layers"], pool))
+            # scatter only the new suffix KV into its (private) pages
+            pad = nbs * bs - s
+            kvs = jnp.pad(kvs, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
+            kvs = kvs.reshape(kvs.shape[0], 2, nbs, bs, cfg.num_kv_heads, hd)
+            pool = pool.at[:, :, suffix_bt].set(kvs)
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            logits = lm_logits(params, x[:, -1], cfg)
+            return logits[0], pool
+
+        return jax.jit(step)
 
     # -- batched paged decode --------------------------------------------------
     def _build_decode(self):
@@ -94,9 +170,12 @@ class PagedModelRunner:
                 sin, cos = attn_mod.rope_at(positions[:, None], hd, cfg.rope_theta)
                 q = attn_mod.apply_rope(q, sin, cos)
                 k = attn_mod.apply_rope(k, sin, cos)
-                # write k/v at (table[pos // bs], pos % bs)
+                # write k/v at (table[pos // bs], pos % bs); dead batch slots
+                # point past the pool (mode="drop") so they can never stomp a
+                # live page — block tables may now be shared across sequences
                 flat = block_tables[jnp.arange(tokens.shape[0]), positions // bs] * bs \
                     + positions % bs
+                flat = jnp.where(live, flat, pool_layer[0].shape[0] * bs)
                 kp = pool_layer[0].reshape(-1, cfg.num_kv_heads, hd).at[flat].set(
                     k[:, 0], mode="drop").reshape(pool_layer[0].shape)
                 vp = pool_layer[1].reshape(-1, cfg.num_kv_heads, hd).at[flat].set(
@@ -141,6 +220,8 @@ class EngineStats:
     n_preempted: int = 0
     n_admitted: int = 0
     recent_oom: bool = False      # set on preemption; cleared by monitor reads
+    prefill_tokens: int = 0       # prompt tokens actually prefilled
+    prefill_tokens_saved: int = 0  # prompt tokens served from the prefix cache
 
 
 class LLMEngine:
@@ -148,9 +229,12 @@ class LLMEngine:
 
     def __init__(self, runner: PagedModelRunner, instance_id: int = 0,
                  max_batch: int = 8, eos_token: int = -1,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 enable_prefix_cache: bool = False):
         self.runner = runner
         self.bm = BlockManager(runner.num_blocks, runner.block_size)
+        self.prefix_cache = (PrefixCache(runner.block_size)
+                             if enable_prefix_cache else None)
         self.instance_id = instance_id
         self.max_batch = max_batch
         self.eos_token = eos_token
@@ -169,6 +253,11 @@ class LLMEngine:
     def kv_used_tokens(self) -> int:
         return sum(r.total_len for r in self.running)
 
+    @property
+    def kv_cached_tokens(self) -> int:
+        """Tokens parked in zero-ref prefix-cache blocks (reclaimable)."""
+        return self.bm.cached_blocks * self.bm.block_size
+
     def memory_free_fraction(self) -> float:
         return self.bm.free_blocks / self.bm.num_blocks
 
@@ -184,12 +273,45 @@ class LLMEngine:
 
     # ---------------------------------------------------------------- stepping
     def _admit(self):
-        while (self.waiting and len(self.running) < self.max_batch
-               and self.bm.can_allocate(self.waiting[0].req_id,
-                                        self.waiting[0].prompt_len + 1)):
-            req = self.waiting.popleft()
-            table = self.bm.allocate(req.req_id, req.prompt_len + 1)
-            logits = self.runner.prefill(jnp.asarray(req.prompt_tokens, jnp.int32), table)
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            cache = self.prefix_cache
+            hashes: List[int] = []
+            cached: List[int] = []
+            if cache is not None:
+                if req.prefix_hashes is None:
+                    req.prefix_hashes = PrefixCache.hash_tokens(
+                        req.prompt_tokens, self.bm.block_size)
+                hashes = req.prefix_hashes
+                cached = cache.match(
+                    hashes[:cache.usable_prefix_blocks(req.prompt_len)], self.bm)
+            need = self.bm.blocks_needed(req.prompt_len + 1) - len(cached)
+            if need > self.bm.free_blocks and cache is not None:
+                cache.evict(self.bm, need - self.bm.free_blocks)
+            if need > self.bm.free_blocks:
+                for b in cached:          # abort: hand the refs back
+                    self.bm.ref_release(b)
+                break
+            self.waiting.popleft()
+            n_cached = len(cached) * self.bm.block_size
+            if cached:
+                table = self.bm.allocate_shared(req.req_id, cached,
+                                                req.prompt_len + 1)
+            else:
+                table = self.bm.allocate(req.req_id, req.prompt_len + 1)
+            toks = jnp.asarray(req.prompt_tokens, jnp.int32)
+            if n_cached:
+                logits = self.runner.prefill_suffix(toks[n_cached:], table,
+                                                    n_cached)
+            else:
+                logits = self.runner.prefill(toks, table)
+            if cache is not None:
+                full = req.prompt_len // self.bm.block_size
+                cache.insert(hashes[:full], table[:full], self.bm)
+                cache.note_admitted(len(cached), bool(hashes))
+            req.cached_prefix_len = n_cached
+            self.stats.prefill_tokens += req.prompt_len - n_cached
+            self.stats.prefill_tokens_saved += n_cached
             self._next_tok[req.req_id] = int(jnp.argmax(logits))
             if req.exec_start_time < 0:
                 req.exec_start_time = self.clock()
@@ -213,7 +335,9 @@ class LLMEngine:
 
     def _ensure_growable(self):
         """The whole running batch needs room to grow one token this step
-        (cumulative blocks, not per-request)."""
+        (cumulative blocks, not per-request).  Under pressure, cold cached
+        blocks are evicted before any running request is preempted —
+        recompute is far costlier than losing a cache entry."""
         def deficit():
             need = sum(
                 max(self.bm.blocks_needed(r.total_len + 1)
@@ -222,6 +346,9 @@ class LLMEngine:
             return need - self.bm.free_blocks
 
         while self.running and deficit() > 0:
+            if (self.prefix_cache is not None
+                    and self.prefix_cache.evict(self.bm, deficit())):
+                continue
             self._preempt_one()
 
     def step(self) -> List[Request]:
@@ -241,6 +368,12 @@ class LLMEngine:
         live = np.zeros((b,), bool)
         for i, r in enumerate(batch):
             self.bm.allocate(r.req_id, r.total_len + 1)
+            if self.prefix_cache is not None:
+                # decode writes at r.total_len: that page must be private
+                cow = self.bm.copy_on_write(
+                    r.req_id, r.total_len // self.bm.block_size)
+                if cow is not None:
+                    self.runner.copy_block(*cow)
             t = self.bm.block_table(r.req_id)
             tables[i, :len(t)] = t
             tokens[i] = self._next_tok[r.req_id]

@@ -38,6 +38,17 @@ class Request:
     max_new_tokens: int = 512
     true_output_len: int = 0                    # sim: hidden until executed
 
+    # --- shared-prefix KV reuse (prefix_cache.py) ----------------------------
+    shared_prefix_len: int = 0      # declared shareable prefix (agent system
+    #                                 prompt) — the dispatcher discounts these
+    #                                 tokens so shared KV isn't double-counted
+    cache_key: Optional[str] = None  # sim: identity of the shared prefix
+    cached_prefix_len: int = 0      # observed at admission: tokens served
+    #                                 from cache (prefill skipped)
+    prefix_hashes: Optional[list] = None  # memoized block-hash chain of the
+    #                                 (immutable) prompt — a stalled request
+    #                                 retries admission every engine step
+
     # --- timestamps (§4.1 Execution Timestamps) ------------------------------
     app_start_time: float = 0.0                 # arrival at the frontend
     arrival_time: float = 0.0                   # arrival at this LLM stage

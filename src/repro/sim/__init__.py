@@ -6,8 +6,10 @@ from repro.sim.workload import (
     arrival_times,
     colocated_apps,
     make_app,
+    with_shared_prefixes,
 )
 
 __all__ = ["COST_MODELS", "LLAMA2_13B", "LLAMA3_8B", "CostModel", "SimConfig",
            "SimInstance", "SimResults", "Simulation", "run_policy",
-           "AgentProfile", "AppSpec", "arrival_times", "colocated_apps", "make_app"]
+           "AgentProfile", "AppSpec", "arrival_times", "colocated_apps", "make_app",
+           "with_shared_prefixes"]

@@ -34,6 +34,7 @@ from repro.core import (
 )
 from repro.core.orchestrator import HardwareProfile
 from repro.serving.kv_cache import BlockManager
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import CompletionRecord, Request, RequestState
 from repro.sim.cost_model import LLAMA3_8B, CostModel
 from repro.sim.workload import AppSpec, arrival_times
@@ -50,16 +51,19 @@ BALANCER_PERIOD = 0.05      # retry period when requests sit in the queue (s)
 class SimInstance:
     def __init__(self, instance_id: int, cost: CostModel,
                  kv_capacity_tokens: int, block_size: int = 16,
-                 max_batch: int = 16):
+                 max_batch: int = 16, prefix_caching: bool = False):
         self.instance_id = instance_id
         self.cost = cost
         self.bm = BlockManager(kv_capacity_tokens // block_size, block_size)
+        self.cache = PrefixCache(block_size) if prefix_caching else None
         self.max_batch = max_batch
         self.waiting: collections.deque[Request] = collections.deque()
         self.running: List[Request] = []
         self.n_preempted = 0
         self.recent_oom = False
         self.busy = False
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_saved = 0
 
     # ------------------------------------------------------------------ intake
     def submit(self, req: Request):
@@ -69,12 +73,15 @@ class SimInstance:
 
     def can_admit(self, req: Request, watermark: float = 0.90) -> bool:
         """Immediate admission capacity: batch slot + prompt memory below a
-        high-watermark (vLLM-style hysteresis against growth thrash)."""
+        high-watermark (vLLM-style hysteresis against growth thrash).
+        Zero-ref cached blocks are reclaimable, so they don't count against
+        the watermark."""
         if len(self.running) + len(self.waiting) >= self.max_batch:
             return False
         pending = sum(r.prompt_len + 1 for r in self.waiting)
         need = self.bm.blocks_needed(req.prompt_len + 1 + pending)
-        budget = int(self.bm.num_blocks * watermark) - self.bm.used_blocks
+        hard_used = self.bm.used_blocks - self.bm.cached_blocks
+        budget = int(self.bm.num_blocks * watermark) - hard_used
         return need <= budget
 
     # ------------------------------------------------------------------ policy
@@ -98,27 +105,67 @@ class SimInstance:
             return need - self.bm.free_blocks
 
         while self.running and deficit() > 0:
+            # cold cache first: evicting a parked block is free, while
+            # preemption throws away all of the victim's decode progress
+            if self.cache is not None and self.cache.evict(self.bm, deficit()):
+                continue
             self._preempt_one(now)
 
     # ------------------------------------------------------------------ step
+    def _match_prefix(self, req: Request):
+        """Longest cached shared-prefix match for a sim request (only the
+        declared system-prompt prefix is content-identical across calls)."""
+        if self.cache is None or not req.cache_key or req.shared_prefix_len <= 0:
+            return [], []
+        n_blocks = min(req.prompt_len - 1, req.shared_prefix_len) \
+            // self.bm.block_size
+        hashes = PrefixCache.key_chain(req.cache_key, n_blocks)
+        return hashes, self.cache.match(hashes, self.bm)
+
     def step(self, now: float) -> Tuple[List[Request], Optional[float]]:
         """Run one continuous-batching iteration starting at `now`.
         Returns (requests finished at now+dt, dt) or ([], None) if idle."""
         prefill_tokens = 0
+        cached_tokens = 0
         watermark_blocks = int(self.bm.num_blocks * 0.95)
-        while (self.waiting and len(self.running) < self.max_batch
-               and self.bm.can_allocate(self.waiting[0].req_id,
-                                        self.waiting[0].prompt_len + 1)
-               and (self.bm.used_blocks
-                    + self.bm.blocks_needed(self.waiting[0].prompt_len + 1)
-                    <= watermark_blocks)):
-            req = self.waiting.popleft()
-            self.bm.allocate(req.req_id, req.prompt_len + 1)
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            hashes, cached = self._match_prefix(req)
+            need = self.bm.blocks_needed(req.prompt_len + 1) - len(cached)
+            # watermark first: it ignores reclaimable cached blocks, so
+            # eviction can't satisfy it — evicting before checking would
+            # trash the warm cache for nothing
+            hard_used = self.bm.used_blocks - self.bm.cached_blocks
+            if hard_used + need > watermark_blocks:
+                for b in cached:
+                    self.bm.ref_release(b)
+                break
+            if need > self.bm.free_blocks and self.cache is not None:
+                self.cache.evict(self.bm, need - self.bm.free_blocks)
+            if need > self.bm.free_blocks:
+                for b in cached:
+                    self.bm.ref_release(b)
+                break
+            self.waiting.popleft()
+            if cached:
+                table = self.bm.allocate_shared(req.req_id, cached,
+                                                req.prompt_len + 1)
+            else:
+                table = self.bm.allocate(req.req_id, req.prompt_len + 1)
+            if self.cache is not None:
+                if hashes:
+                    self.cache.insert(hashes, table[:len(hashes)], self.bm)
+                self.cache.note_admitted(len(cached), bool(hashes))
+            n_cached = len(cached) * self.bm.block_size
+            req.cached_prefix_len = n_cached
             if req.exec_start_time < 0:
                 req.exec_start_time = now
             req.state = RequestState.RUNNING
             self.running.append(req)
-            prefill_tokens += req.prompt_len
+            prefill_tokens += req.prompt_len - n_cached
+            cached_tokens += n_cached
+        self.prefill_tokens_total += prefill_tokens + cached_tokens
+        self.prefill_tokens_saved += cached_tokens
         if not self.running:
             return [], None
         self._ensure_growable(now)
@@ -127,7 +174,10 @@ class SimInstance:
         batch = self.running[: self.max_batch]
         for r in batch:
             self.bm.allocate(r.req_id, r.total_len + 1)
-        dt = self.cost.iteration_time(len(batch), prefill_tokens)
+            if self.cache is not None:
+                self.bm.copy_on_write(r.req_id,
+                                      r.total_len // self.bm.block_size)
+        dt = self.cost.iteration_time(len(batch), prefill_tokens, cached_tokens)
         finished = []
         for r in batch:
             r.output_len += 1
@@ -161,6 +211,7 @@ class SimConfig:
     cost: CostModel = LLAMA3_8B
     seed: int = 0
     warmup_frac: float = 0.1          # excluded from metrics (online learning)
+    prefix_caching: bool = False      # shared-prefix KV reuse on instances
 
 
 @dataclasses.dataclass
@@ -182,6 +233,12 @@ class SimResults:
     n_preempted: int
     queueing_ratio: float
     policy: str
+    prefill_tokens_total: int = 0
+    prefill_tokens_saved: int = 0
+
+    @property
+    def prefill_savings(self) -> float:
+        return self.prefill_tokens_saved / max(self.prefill_tokens_total, 1)
 
     def token_latencies(self) -> np.ndarray:
         """Program-level token latency [37]: e2e response time / tokens."""
@@ -202,6 +259,7 @@ class SimResults:
             "n_workflows": float(len(tl)),
             "preempted": float(self.n_preempted),
             "queueing_ratio": self.queueing_ratio,
+            "prefill_savings": self.prefill_savings,
         }
 
 
@@ -218,9 +276,10 @@ class Simulation:
         hw = HardwareProfile(
             decode_tok_per_s=cfg.cost.decode_tok_per_s(typical_batch=cfg.max_batch // 2),
             kv_capacity_tokens=cfg.kv_capacity_tokens)
-        self.orch = Orchestrator(hardware=hw)
+        self.orch = Orchestrator(hardware=hw, prefix_caching=cfg.prefix_caching)
         self.instances = [
-            SimInstance(i, cfg.cost, cfg.kv_capacity_tokens, max_batch=cfg.max_batch)
+            SimInstance(i, cfg.cost, cfg.kv_capacity_tokens, max_batch=cfg.max_batch,
+                        prefix_caching=cfg.prefix_caching)
             for i in range(cfg.n_instances)]
         models = [InstanceModel(i.instance_id, cfg.kv_capacity_tokens)
                   for i in self.instances]
@@ -297,6 +356,8 @@ class Simulation:
             prompt_len=prof.sample_prompt_len(rng),
             true_output_len=prof.sample_output_len(rng),
             max_new_tokens=10 ** 9,
+            shared_prefix_len=prof.system_prompt_len,
+            cache_key=f"{wf.app.name}|{agent}",
             arrival_time=now, app_start_time=wf.start_time)
         wf.outstanding += 1
         wf.hops += 1
@@ -377,6 +438,8 @@ class Simulation:
             n_preempted=sum(i.n_preempted for i in self.instances),
             queueing_ratio=qsum / max(esum, 1e-9),
             policy=cfg.policy,
+            prefill_tokens_total=sum(i.prefill_tokens_total for i in self.instances),
+            prefill_tokens_saved=sum(i.prefill_tokens_saved for i in self.instances),
         )
 
 

@@ -28,12 +28,16 @@ class AgentProfile:
     out_sigma: float
     prompt_mu: float = 5.0         # lognormal of prompt length (~150 tok)
     prompt_sigma: float = 0.4
+    system_prompt_len: int = 0     # tokens of the agent's fixed preamble —
+    #                                identical across calls, so engines with
+    #                                prefix caching serve them from shared KV
 
     def sample_output_len(self, rng: np.random.Generator) -> int:
         return max(2, int(rng.lognormal(self.out_mu, self.out_sigma)))
 
     def sample_prompt_len(self, rng: np.random.Generator) -> int:
-        return max(8, int(rng.lognormal(self.prompt_mu, self.prompt_sigma)))
+        unique = max(8, int(rng.lognormal(self.prompt_mu, self.prompt_sigma)))
+        return self.system_prompt_len + unique
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +124,15 @@ CG_GROUPS = ("HE", "MBPP", "APPS")
 
 def make_app(app: str, group: str) -> AppSpec:
     return {"QA": _qa, "RG": _rg, "CG": _cg}[app](group)
+
+
+def with_shared_prefixes(app: AppSpec, system_prompt_len: int) -> AppSpec:
+    """Variant of ``app`` whose every agent carries a fixed
+    ``system_prompt_len``-token preamble (the shared-prefix reuse
+    scenario: same agent prompt resent on every call)."""
+    agents = {n: dataclasses.replace(p, system_prompt_len=system_prompt_len)
+              for n, p in app.agents.items()}
+    return dataclasses.replace(app, agents=agents)
 
 
 def colocated_apps() -> List[AppSpec]:

@@ -1,12 +1,17 @@
-"""Property-based tests (hypothesis): BlockManager invariants and the
+"""Property-based tests (hypothesis): BlockManager invariants (including
+ref-counting / copy-on-write block sharing), the prefix cache, and the
 time-slot memory model (Eqs. 1–3)."""
-import hypothesis.strategies as st
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.dispatcher import _slot_usage_matrix
 from repro.core.memory_model import make_ramp
 from repro.serving.kv_cache import BlockManager, NoFreeBlocks
+from repro.serving.prefix_cache import PrefixCache
 
 
 @settings(max_examples=60, deadline=None)
@@ -46,6 +51,123 @@ def test_block_manager_invariants(num_blocks, block_size, ops):
     for s in list(bm.owned_seqs()):
         bm.free(s)
     assert bm.free_blocks == num_blocks
+
+
+def _check_sharing_invariants(bm: BlockManager):
+    """Core conservation + refcount laws for the shared block manager."""
+    tables = [bm.block_table(s) for s in bm.owned_seqs()]
+    multiplicity = {}
+    for t in tables:
+        for b in t:
+            multiplicity[b] = multiplicity.get(b, 0) + 1
+    # refcount == number of tables referencing the block
+    for b, n in multiplicity.items():
+        assert bm.ref_count(b) == n
+    active = set(multiplicity)
+    free = set(bm._free)
+    parked = set(bm._parked)
+    # a referenced (shared or not) block is never free, never parked
+    assert not (active & free)
+    assert not (active & parked)
+    assert not (free & parked)
+    # conservation: free + active + cached == num_blocks
+    assert len(free) + len(active) + len(parked) == bm.num_blocks
+    assert bm.free_blocks + bm.active_blocks + bm.cached_blocks == bm.num_blocks
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    num_blocks=st.integers(6, 48),
+    block_size=st.integers(1, 8),
+    ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("admit"), st.integers(0, 5),   # seq id
+                      st.integers(0, 3),                     # prompt family
+                      st.integers(2, 64)),                   # prompt tokens
+            st.tuples(st.just("free"), st.integers(0, 5)),
+            st.tuples(st.just("evict"), st.integers(1, 8)),
+            st.tuples(st.just("cow"), st.integers(0, 5)),
+        ),
+        max_size=40),
+)
+def test_refcount_cow_invariants(num_blocks, block_size, ops):
+    """Ref-counted COW sharing through the prefix cache: a shared block is
+    never freed while referenced; free + active + cached == num_blocks;
+    copy-on-write always yields a privately owned block."""
+    bm = BlockManager(num_blocks, block_size)
+    cache = PrefixCache(block_size)
+    live = {}
+    for op in ops:
+        if op[0] == "admit":
+            _, seq, family, n_tok = op
+            if seq in live:
+                continue
+            # same family => same token stream => shareable prefix
+            tokens = (np.arange(n_tok, dtype=np.int64) + 1000 * family)
+            hashes = cache.hash_tokens(tokens, block_size)
+            cached = cache.match(hashes[:cache.usable_prefix_blocks(n_tok)], bm)
+            need = bm.blocks_needed(n_tok + 1) - len(cached)
+            if need > bm.free_blocks:
+                cache.evict(bm, need - bm.free_blocks)
+            if need > bm.free_blocks:
+                for b in cached:
+                    bm.ref_release(b)
+            else:
+                table = (bm.allocate_shared(seq, cached, n_tok + 1) if cached
+                         else bm.allocate(seq, n_tok + 1))
+                full = n_tok // block_size
+                cache.insert(hashes[:full], table[:full], bm)
+                live[seq] = n_tok
+        elif op[0] == "free":
+            bm.free(op[1])
+            live.pop(op[1], None)
+        elif op[0] == "evict":
+            cache.evict(bm, op[1])
+        elif op[0] == "cow":
+            seq = op[1]
+            if seq not in live:
+                continue
+            # block 0 is the most likely to be shared (cached prefix head)
+            idx = 0
+            old_b = bm.block_table(seq)[idx]
+            try:
+                res = bm.copy_on_write(seq, idx)
+            except NoFreeBlocks:
+                continue
+            new_b = bm.block_table(seq)[idx]
+            assert bm.ref_count(new_b) == 1
+            assert not bm.is_shared(new_b)
+            if res is not None:
+                assert res == (old_b, new_b) and old_b != new_b
+            else:
+                assert new_b == old_b
+        _check_sharing_invariants(bm)
+    # teardown: free every sequence, evict the whole cache -> all blocks free
+    for seq in list(live):
+        bm.free(seq)
+    cache.evict(bm, bm.num_blocks)
+    assert bm.free_blocks == bm.num_blocks
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    block_size=st.integers(1, 8),
+    a=st.lists(st.integers(0, 7), min_size=1, max_size=40),
+    b=st.lists(st.integers(0, 7), min_size=1, max_size=40),
+)
+def test_hash_chain_prefix_property(block_size, a, b):
+    """hash_tokens is a radix: chains agree exactly on the shared full-block
+    prefix of the two token streams."""
+    ha = PrefixCache.hash_tokens(np.asarray(a), block_size)
+    hb = PrefixCache.hash_tokens(np.asarray(b), block_size)
+    common = 0
+    while (common < min(len(a), len(b))
+           and a[common] == b[common]):
+        common += 1
+    shared_blocks = common // block_size
+    for i in range(min(len(ha), len(hb))):
+        if i < shared_blocks:
+            assert ha[i] == hb[i]
 
 
 @settings(max_examples=60, deadline=None)

@@ -1,0 +1,233 @@
+"""Shared-prefix KV reuse: block-manager sharing unit tests, the
+hash-indexed prefix cache, engine-level cache-hit correctness (identical
+tokens vs a cold run), eviction under pressure, and the sim integration."""
+import jax
+import numpy as np
+import pytest
+
+from repro.serving import BlockManager, LLMEngine, PagedModelRunner, Request
+from repro.serving.prefix_cache import PrefixCache
+
+
+# =============================================================================
+# BlockManager sharing
+# =============================================================================
+
+
+def test_ref_acquire_release_lifecycle():
+    bm = BlockManager(8, 4)
+    table = bm.allocate(1, 8)                  # 2 blocks, ref 1 each
+    assert [bm.ref_count(b) for b in table] == [1, 1]
+    bm.ref_acquire(table[0])                   # share with someone else
+    assert bm.ref_count(table[0]) == 2 and bm.is_shared(table[0])
+    bm.free(1)                                 # seq gone; shared block survives
+    assert bm.ref_count(table[0]) == 1
+    assert bm.free_blocks == 7                 # only the private block returned
+    bm.ref_release(table[0])
+    assert bm.free_blocks == 8
+
+
+def test_cacheable_blocks_park_instead_of_freeing():
+    bm = BlockManager(4, 2)
+    table = bm.allocate(1, 4)
+    bm.mark_cacheable(table[0])
+    bm.free(1)
+    assert bm.cached_blocks == 1 and bm.free_blocks == 3
+    # parked KV can be re-acquired (a cache hit) ...
+    bm.ref_acquire(table[0])
+    assert bm.cached_blocks == 0 and bm.ref_count(table[0]) == 1
+    bm.ref_release(table[0])
+    # ... or reclaimed (eviction)
+    bm.reclaim(table[0])
+    assert bm.free_blocks == 4 and bm.cached_blocks == 0
+
+
+def test_copy_on_write_duplicates_shared_block():
+    bm = BlockManager(8, 4)
+    t1 = bm.allocate(1, 8)
+    bm.ref_acquire(t1[0])
+    bm._owned[2] = [t1[0]]                     # second table shares block 0
+    res = bm.copy_on_write(2, 0)
+    assert res is not None and res[0] == t1[0]
+    assert bm.block_table(2)[0] != t1[0]
+    assert bm.ref_count(t1[0]) == 1            # original owner keeps it
+    # private block: COW is a no-op
+    assert bm.copy_on_write(1, 1) is None
+
+
+def test_allocate_shared_seeds_table():
+    bm = BlockManager(8, 4)
+    t1 = bm.allocate(1, 8)
+    bm.mark_cacheable(t1[0])
+    bm.ref_acquire(t1[0])
+    t2 = bm.allocate_shared(2, [t1[0]], 12)    # 1 shared + 2 fresh
+    assert t2[0] == t1[0] and len(t2) == 3
+    assert bm.ref_count(t1[0]) == 2
+    bm.free(1)
+    bm.free(2)
+    assert bm.free_blocks + bm.cached_blocks == 8
+
+
+# =============================================================================
+# PrefixCache
+# =============================================================================
+
+
+def test_match_returns_longest_cached_prefix():
+    bm = BlockManager(16, 4)
+    cache = PrefixCache(4)
+    toks = np.arange(13)
+    hashes = cache.hash_tokens(toks, 4)        # 3 full blocks
+    table = bm.allocate(1, 13)
+    cache.insert(hashes[:2], table[:2], bm)    # only first two cached
+    got = cache.match(hashes, bm)
+    assert got == table[:2]
+    for b in got:
+        bm.ref_release(b)
+    # diverging tokens match only the common prefix
+    other = np.concatenate([np.arange(8), np.arange(50, 55)])
+    got2 = cache.match(cache.hash_tokens(other, 4), bm)
+    assert got2 == table[:2]
+    for b in got2:
+        bm.ref_release(b)
+
+
+def test_eviction_is_lru_and_skips_referenced():
+    bm = BlockManager(8, 2)
+    cache = PrefixCache(2)
+    ta = bm.allocate(1, 4)
+    tb = bm.allocate(2, 4)
+    ha = cache.key_chain("a", 2)
+    hb = cache.key_chain("b", 2)
+    cache.insert(ha, ta, bm)
+    cache.insert(hb, tb, bm)
+    bm.free(1)                                 # a's blocks park
+    cache.match(ha, bm)                        # touch a -> b becomes coldest
+    for b in ta:
+        bm.ref_release(b)
+    # b's blocks are still referenced by seq 2 -> not evictable
+    assert cache.evict(bm, 4) == 2             # only a's two parked blocks
+    assert bm.free_blocks == 4 + 2
+    bm.free(2)
+    assert cache.evict(bm, 4) == 2
+
+
+def test_usable_prefix_caps_below_prompt_len():
+    cache = PrefixCache(8)
+    assert cache.usable_prefix_blocks(1) == 0
+    assert cache.usable_prefix_blocks(8) == 0      # would cover whole prompt
+    assert cache.usable_prefix_blocks(9) == 1
+    assert cache.usable_prefix_blocks(17) == 2
+
+
+def test_key_chain_is_prefix_consistent():
+    a, b = PrefixCache.key_chain("app|agent", 4), PrefixCache.key_chain("app|agent", 2)
+    assert a[:2] == b
+    assert PrefixCache.key_chain("other", 2) != b
+
+
+# =============================================================================
+# Engine integration (real paged JAX engine, reduced model)
+# =============================================================================
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _mk_engine(model_and_params, cache: bool, num_blocks: int = 64):
+    model, params = model_and_params
+    runner = PagedModelRunner(model, params, num_blocks=num_blocks,
+                              block_size=8, max_batch=4)
+    return LLMEngine(runner, instance_id=0, max_batch=4,
+                     enable_prefix_cache=cache)
+
+
+def _shared_prefix_reqs(n: int = 4, sys_len: int = 16, uniq: int = 6,
+                        max_new: int = 4):
+    rng = np.random.default_rng(11)
+    sys_toks = rng.integers(0, 500, sys_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        toks = np.concatenate([sys_toks,
+                               rng.integers(0, 500, uniq).astype(np.int32)])
+        reqs.append(Request(agent_name="a", msg_id=f"m{i}", prompt_len=len(toks),
+                            prompt_tokens=toks, max_new_tokens=max_new,
+                            arrival_time=float(i)))
+    return reqs
+
+
+def test_cache_hit_generates_identical_tokens(model_and_params):
+    outs = {}
+    for cache in (False, True):
+        eng = _mk_engine(model_and_params, cache)
+        for r in _shared_prefix_reqs():
+            eng.submit(r.__class__(agent_name=r.agent_name, msg_id=r.msg_id,
+                                   prompt_len=r.prompt_len,
+                                   prompt_tokens=r.prompt_tokens,
+                                   max_new_tokens=r.max_new_tokens,
+                                   arrival_time=r.arrival_time))
+        done = eng.run_until_drained()
+        assert len(done) == 4
+        outs[cache] = sorted((d.msg_id, tuple(d.output_tokens)) for d in done)
+        if cache:
+            assert eng.stats.prefill_tokens_saved > 0
+            assert eng.prefix_cache.stats.hits >= 3
+        # all private memory returned; only parked cache blocks remain
+        assert eng.bm.free_blocks + eng.bm.cached_blocks == eng.bm.num_blocks
+    assert outs[False] == outs[True]
+
+
+def test_cache_eviction_under_memory_pressure(model_and_params):
+    # tiny pool: long decodes force eviction of parked prefix blocks
+    eng = _mk_engine(model_and_params, True, num_blocks=16)
+    for r in _shared_prefix_reqs(n=5, sys_len=16, uniq=4, max_new=24):
+        eng.submit(r)
+    done = eng.run_until_drained(max_steps=4000)
+    assert len(done) == 5
+    assert eng.prefix_cache.stats.n_evicted > 0 or eng.stats.n_preempted > 0
+    assert eng.bm.free_blocks + eng.bm.cached_blocks == eng.bm.num_blocks
+
+
+# =============================================================================
+# Simulator integration
+# =============================================================================
+
+
+def test_sim_prefix_caching_saves_prefill_and_matches_workload():
+    from repro.sim import SimConfig, Simulation, make_app, with_shared_prefixes
+    apps = [with_shared_prefixes(make_app("QA", "G+M"), 96)]
+    done = {}
+    for pc in (False, True):
+        cfg = SimConfig(apps=apps, policy="kairos", rate=3.0, duration=20.0,
+                        n_instances=2, prefix_caching=pc, seed=5)
+        res = Simulation(cfg).run()
+        done[pc] = res
+        assert res.summary()["n_workflows"] > 0
+    assert done[False].prefill_tokens_saved == 0
+    assert done[True].prefill_tokens_saved > 0
+    assert done[True].prefill_savings > 0.2
+    # same sampled workload either way (deterministic per-request RNG)
+    assert len(done[False].workflows) == len(done[True].workflows)
+
+
+def test_memory_ramp_discounts_shared_prefix():
+    from repro.core.memory_model import make_ramp
+    full = make_ramp(256, 2.0, 30.0, 0.0)
+    disc = make_ramp(256, 2.0, 30.0, 0.0, shared_prefix_tokens=128)
+    assert disc.p_tokens == full.p_tokens - 128
+    assert disc.slope == full.slope
+
+
+def test_orchestrator_ramp_uses_declared_prefix():
+    from repro.core.orchestrator import Orchestrator
+    req = Request(agent_name="a", msg_id="m", prompt_len=200,
+                  shared_prefix_len=100)
+    on = Orchestrator(prefix_caching=True).memory_ramp(req, 0.0)
+    off = Orchestrator(prefix_caching=False).memory_ramp(req, 0.0)
+    assert on.p_tokens < off.p_tokens

@@ -1,6 +1,9 @@
 """Property-based tests on workflow analysis and the priority embedding."""
-import hypothesis.strategies as st
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import assume, given, settings
 
 from repro.core.priority import agent_priorities, classical_mds_1d
