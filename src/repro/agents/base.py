@@ -80,9 +80,11 @@ class Workflow:
 
     def __init__(self, app_name: str = "app", n_instances: int = 1,
                  num_blocks: int = 128, block_size: int = 8, max_batch: int = 4,
-                 prefix_caching: bool = False):
+                 prefix_caching: bool = False,
+                 prefill_chunk_tokens: Optional[int] = None):
         self.app_name = app_name
         self.prefix_caching = prefix_caching
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         self.bus = MessageBus()
         self.orch = Orchestrator(hardware=HardwareProfile(
             decode_tok_per_s=20.0, kv_capacity_tokens=num_blocks * block_size),
@@ -113,8 +115,14 @@ class Workflow:
         for i in range(n):
             runner = PagedModelRunner(m, params, num_blocks=blocks,
                                       block_size=bs, max_batch=mb)
-            self.engines.append(LLMEngine(runner, instance_id=i, max_batch=mb,
-                                          enable_prefix_cache=self.prefix_caching))
+            # Kairos priorities carry into the serving iteration: engine
+            # waiting queues are ordered by the same orchestrator-backed
+            # policy the load balancer uses (batch_scheduler.py)
+            self.engines.append(LLMEngine(
+                runner, instance_id=i, max_batch=mb,
+                enable_prefix_cache=self.prefix_caching,
+                policy=KairosScheduler(self.orch.priority_score),
+                prefill_chunk_tokens=self.prefill_chunk_tokens))
         models = [InstanceModel(i, blocks * bs) for i in range(n)]
         probe = lambda iid, req: (
             len(self.engines[iid].running) + len(self.engines[iid].waiting)

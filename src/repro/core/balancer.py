@@ -48,10 +48,7 @@ class LoadBalancer:
             # starvation valve: a request stuck for a long time is force-
             # placed on the min-peak instance (engine preemption absorbs it)
             force = (now - req.arrival_time) > 30.0
-            try:
-                iid = self.dispatcher.dispatch(req, ramp, now, force=force)
-            except TypeError:
-                iid = self.dispatcher.dispatch(req, ramp, now)
+            iid = self.dispatcher.dispatch(req, ramp, now, force=force)
             if iid is None:
                 if self.strict_head:
                     break

@@ -7,6 +7,11 @@ exceeds capacity; among feasible instances the one with the lowest
 expected total **peak** usage wins.  Adaptive corrections: early
 finishers release their future slots immediately; an instance reporting a
 real OOM/preemption is fenced for a cooldown.
+
+Every dispatcher implements the same contract —
+``dispatch(req, ramp, now, force=False) -> Optional[int]`` plus the
+``on_finish`` / ``on_oom`` feedback hooks — so the load balancer calls
+them uniformly, with no signature probing.
 """
 from __future__ import annotations
 

@@ -16,6 +16,9 @@ from repro.serving.request import Request
 
 
 class SchedulerPolicy:
+    """Shared by the load balancer (cluster queue, Fig. 10 ②) and by the
+    instance-level :class:`~repro.serving.batch_scheduler.BatchScheduler`
+    (waiting-queue order + preemption-victim choice)."""
     name = "base"
 
     def sort_key(self, req: Request):
@@ -23,6 +26,16 @@ class SchedulerPolicy:
 
     def order(self, queue: List[Request]) -> List[Request]:
         return sorted(queue, key=self.sort_key)
+
+    def victim_key(self, req: Request):
+        """Preemption picks ``max(running, key=victim_key)``.  Default:
+        the latest-arrived request — the classic vLLM recompute victim,
+        which has accumulated the least decode progress, so recompute
+        wastes the least work.  (Preempting by admission priority instead
+        repeatedly kills the most-progressed long-output requests and
+        measurably inflates preemption counts.)  Policies may override to
+        couple victim choice to their ordering."""
+        return (req.arrival_time, req.req_id)
 
 
 class FCFSScheduler(SchedulerPolicy):

@@ -1,8 +1,24 @@
+from repro.serving.batch_scheduler import (
+    BatchScheduler,
+    IterationPlan,
+    KeyPrefixMatcher,
+    PrefillChunk,
+    SchedStats,
+    TokenPrefixMatcher,
+)
 from repro.serving.engine import LLMEngine, PagedModelRunner
 from repro.serving.kv_cache import BlockManager, NoFreeBlocks
 from repro.serving.prefix_cache import PrefixCache, PrefixCacheStats
-from repro.serving.request import CompletionRecord, Request, RequestState
+from repro.serving.request import (
+    CompletionRecord,
+    Request,
+    RequestState,
+    reset_request_ids,
+)
 
-__all__ = ["LLMEngine", "PagedModelRunner", "BlockManager", "NoFreeBlocks",
+__all__ = ["BatchScheduler", "IterationPlan", "KeyPrefixMatcher",
+           "PrefillChunk", "SchedStats", "TokenPrefixMatcher",
+           "LLMEngine", "PagedModelRunner", "BlockManager", "NoFreeBlocks",
            "PrefixCache", "PrefixCacheStats",
-           "CompletionRecord", "Request", "RequestState"]
+           "CompletionRecord", "Request", "RequestState",
+           "reset_request_ids"]

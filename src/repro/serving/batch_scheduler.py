@@ -1,0 +1,461 @@
+"""Instance-level batch scheduler shared by the real engine and the simulator.
+
+Kairos' workflow-aware priorities (§5) used to stop at the load balancer:
+once dispatched, both :class:`~repro.serving.engine.LLMEngine` and the
+simulator's ``SimInstance`` fell back to FCFS deques with monolithic
+prefill, so a long prompt head-of-line-blocked every running decode for a
+full iteration.  This module owns every instance-side scheduling decision
+— admission, prefix-cache matching, block accounting, growth / eviction /
+preemption, and per-iteration batch composition — so that the real JAX
+engine and the discrete-event simulator are thin *execution backends* of
+one policy implementation instead of two drifting copies.
+
+Two capabilities live here:
+
+* **Priority-ordered instance queues** — the waiting queue is ordered by a
+  :class:`~repro.core.scheduler.SchedulerPolicy` (FCFS for baselines,
+  ``KairosScheduler`` for kairos runs), and admission is *strict*: the
+  policy-first request that does not fit blocks everything behind it, so
+  low-priority work can never slip past a high-priority request under
+  memory pressure.  Preemption picks ``max`` by the policy's
+  ``victim_key`` — by default the latest arrival (the classic vLLM
+  recompute victim, least progress lost), independent of admission order.
+
+* **Chunked prefill** (Sarathi-style) — with ``prefill_chunk_tokens`` set,
+  prompts are prefilled in budget-sized chunks interleaved with decode
+  steps instead of one monolithic pass, bounding the per-iteration stall a
+  long prompt can inflict on running decodes.  ``prefill_chunk_tokens=None``
+  reproduces monolithic prefill exactly (token-identical, same block
+  accounting).
+
+The scheduler composes an :class:`IterationPlan` per step; the engine
+executes it with :class:`~repro.serving.engine.PagedModelRunner` (real
+tokens), the simulator prices it with
+:meth:`~repro.sim.cost_model.CostModel.iteration_time`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.scheduler import FCFSScheduler, SchedulerPolicy
+from repro.serving.kv_cache import BlockManager
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.request import Request, RequestState
+
+
+# =============================================================================
+# prefix matchers (how a request's shareable prefix is identified)
+# =============================================================================
+
+
+class TokenPrefixMatcher:
+    """Real engine: hash the actual prompt tokens (full blocks only)."""
+
+    def __call__(self, req: Request, cache: PrefixCache,
+                 bm: BlockManager) -> Tuple[List[int], List[int]]:
+        if req.prefix_hashes is None:
+            req.prefix_hashes = PrefixCache.hash_tokens(
+                req.prompt_tokens, bm.block_size)
+        hashes = req.prefix_hashes
+        cached = cache.match(
+            hashes[:cache.usable_prefix_blocks(req.prompt_len)], bm)
+        return hashes, cached
+
+
+class KeyPrefixMatcher:
+    """Simulator: synthetic hash chain from the declared ``cache_key`` /
+    ``shared_prefix_len`` (only the agent system prompt is known to be
+    content-identical across calls)."""
+
+    def __call__(self, req: Request, cache: PrefixCache,
+                 bm: BlockManager) -> Tuple[List[int], List[int]]:
+        if not req.cache_key or req.shared_prefix_len <= 0:
+            return [], []
+        n_blocks = min(req.prompt_len - 1, req.shared_prefix_len) \
+            // bm.block_size
+        hashes = PrefixCache.key_chain(req.cache_key, n_blocks)
+        return hashes, cache.match(hashes, bm)
+
+
+# =============================================================================
+# iteration plan
+# =============================================================================
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    """One prompt segment to prefill this iteration: tokens
+    ``[start, end)`` of ``req.prompt_tokens``, attending over the
+    ``start`` resident tokens already in the pool (cached prefix +
+    earlier chunks).  ``is_last`` marks the chunk that completes the
+    prompt and yields next-token logits."""
+    req: Request
+    start: int
+    end: int
+    is_last: bool
+
+
+@dataclasses.dataclass
+class IterationPlan:
+    """What one continuous-batching iteration executes.
+
+    ``prefill_tokens`` — newly computed prompt tokens (sum of chunk sizes);
+    ``context_tokens`` — resident tokens those chunks attend over (prices
+    the re-read cost of chunked prefill; for monolithic prefill it equals
+    the admission cache hit);
+    ``cow`` — (src, dst) physical block copies the backend must perform
+    before decoding (copy-on-write of shared pages).
+    """
+    chunks: List[PrefillChunk]
+    decode: List[Request]
+    cow: List[Tuple[int, int]]
+    prefill_tokens: int
+    context_tokens: int
+
+
+@dataclasses.dataclass
+class SchedStats:
+    n_finished: int = 0
+    n_preempted: int = 0
+    n_admitted: int = 0
+    recent_oom: bool = False      # set on preemption; cleared by monitor reads
+    prefill_tokens: int = 0       # prompt tokens actually computed
+    prefill_tokens_saved: int = 0  # prompt tokens served from the prefix cache
+
+
+# =============================================================================
+# the scheduler
+# =============================================================================
+
+
+class BatchScheduler:
+    """Admission + batch composition for one LLM instance.
+
+    Parameters
+    ----------
+    bm:
+        The instance's :class:`BlockManager` (owned by the backend so it
+        can also expose monitor surfaces).
+    policy:
+        Ordering of the waiting queue and preemption-victim choice.
+        Default FCFS (vLLM/Parrot semantics).
+    prefix_cache / matcher:
+        Shared-prefix KV reuse; ``matcher`` maps a request to its hash
+        chain + cached blocks (token-hashing for the engine, key-chain
+        for the simulator).
+    max_running:
+        Admission cap: how many requests may hold KV concurrently.
+    max_batch:
+        Per-iteration execution cap (decode slots).  Defaults to
+        ``max_running``.
+    prefill_chunk_tokens:
+        Per-iteration prefill token budget.  ``None`` = monolithic
+        prefill (a prompt is fully prefilled at admission, exactly the
+        pre-refactor behaviour).
+    watermark:
+        Admission high-watermark on *hard* (non-reclaimable) block usage,
+        vLLM-style hysteresis against growth thrash.
+    on_preempt:
+        Backend hook called with the victim request (e.g. the engine
+        drops its pending next-token).
+    """
+
+    def __init__(self, bm: BlockManager, *,
+                 policy: Optional[SchedulerPolicy] = None,
+                 prefix_cache: Optional[PrefixCache] = None,
+                 matcher=None,
+                 max_running: int = 16,
+                 max_batch: Optional[int] = None,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 watermark: float = 0.95,
+                 on_preempt: Optional[Callable[[Request], None]] = None):
+        assert prefill_chunk_tokens is None or prefill_chunk_tokens > 0
+        self.bm = bm
+        self.policy = policy or FCFSScheduler()
+        self.prefix_cache = prefix_cache
+        self.matcher = matcher or TokenPrefixMatcher()
+        self.max_running = max_running
+        self.max_batch = max_batch if max_batch is not None else max_running
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.watermark = watermark
+        self.on_preempt = on_preempt
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.stats = SchedStats()
+        # hash chain of requests admitted with chunking still in flight:
+        # blocks are registered with the cache only once their KV exists
+        self._pending_hashes: Dict[int, List[int]] = {}
+        self._inserted_blocks: Dict[int, int] = {}
+        # monolithic mode indexes blocks at admission, before the backend
+        # executes the prefill (so same-plan admissions can share them);
+        # the (hash, block) pairs are provisional until the chunk that
+        # writes them is composed, and are retracted if the request is
+        # preempted first
+        self._provisional: Dict[int, List[tuple]] = {}
+
+    # ------------------------------------------------------------------ intake
+    def submit(self, req: Request):
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.running or self.waiting)
+
+    def can_admit(self, req: Request,
+                  watermark: Optional[float] = None) -> bool:
+        """Dispatcher probe: immediate admission capacity — batch slot +
+        prompt memory below a high-watermark.  Zero-ref cached blocks are
+        reclaimable, so they don't count against the watermark.  The
+        probe defaults to the admission watermark minus a 0.05 hysteresis
+        margin, so it always answers consistently with what ``_admit``
+        will actually do."""
+        if watermark is None:
+            watermark = self.watermark - 0.05
+        if len(self.running) + len(self.waiting) >= self.max_running:
+            return False
+        pending = sum(r.prompt_len + 1 for r in self.waiting)
+        need = self.bm.blocks_needed(req.prompt_len + 1 + pending)
+        if not self.running and not self.waiting:
+            # idle-instance bypass, mirroring _admit: an oversized prompt
+            # may commit the whole pool rather than never dispatching
+            return need <= self.bm.num_blocks - self.bm.hard_used_blocks
+        budget = int(self.bm.num_blocks * watermark) - self.bm.hard_used_blocks
+        return need <= budget
+
+    # --------------------------------------------------------------- admission
+    def _admit(self, now: float):
+        """Admit waiting requests in strict policy order.  The first
+        request that does not fit (memory watermark or free blocks)
+        blocks admission — priority order is preserved even under
+        pressure.  Admission is *not* gated on the prefill budget: an
+        admitted prompt holds exactly the memory the monolithic path
+        would, and the chunk budget below only shapes when its compute
+        happens."""
+        if not self.waiting:
+            return
+        watermark_blocks = int(self.bm.num_blocks * self.watermark)
+        admitted: List[Request] = []
+        for req in self.policy.order(self.waiting):
+            if len(self.running) >= self.max_running:
+                break
+            hashes: List[int] = []
+            cached: List[int] = []
+            if self.prefix_cache is not None:
+                hashes, cached = self.matcher(req, self.prefix_cache, self.bm)
+            need = self.bm.blocks_needed(req.prompt_len + 1) - len(cached)
+            # watermark first: it ignores reclaimable cached blocks, so
+            # eviction can't satisfy it — evicting before checking would
+            # trash the warm cache for nothing.  It only applies while
+            # something is running: an idle instance may commit the whole
+            # pool to one huge prompt (otherwise a prompt needing more
+            # than watermark_blocks would starve forever)
+            if (self.running
+                    and self.bm.hard_used_blocks + need > watermark_blocks):
+                for b in cached:
+                    self.bm.ref_release(b)
+                break
+            if need > self.bm.free_blocks and self.prefix_cache is not None:
+                self.prefix_cache.evict(self.bm, need - self.bm.free_blocks)
+            if need > self.bm.free_blocks:
+                for b in cached:          # abort: hand the refs back
+                    self.bm.ref_release(b)
+                break
+            n_cached = len(cached) * self.bm.block_size
+            if cached:
+                table = self.bm.allocate_shared(req.req_id, cached,
+                                                req.prompt_len + 1)
+            else:
+                table = self.bm.allocate(req.req_id, req.prompt_len + 1)
+            if self.prefix_cache is not None:
+                self.prefix_cache.note_admitted(len(cached), bool(hashes))
+                if hashes and self.prefill_chunk_tokens is None:
+                    # monolithic: the whole prompt is prefilled this very
+                    # iteration, in admission order — later admissions may
+                    # immediately share these blocks
+                    self._provisional[req.req_id] = self.prefix_cache.insert(
+                        hashes, table[:len(hashes)], self.bm)
+                elif hashes:
+                    # chunked: blocks become shareable only once written
+                    self._pending_hashes[req.req_id] = list(hashes)
+                    self._inserted_blocks[req.req_id] = \
+                        n_cached // self.bm.block_size
+            req.cached_prefix_len = n_cached
+            req.prefilled_len = n_cached
+            if req.exec_start_time < 0:
+                req.exec_start_time = now
+            req.state = RequestState.RUNNING
+            self.running.append(req)
+            admitted.append(req)
+            self.stats.n_admitted += 1
+            # prefill_tokens is charged as chunks are composed (so a
+            # request preempted mid-prefill counts only executed tokens);
+            # cache savings are realized here, at the match
+            self.stats.prefill_tokens_saved += n_cached
+        if admitted:
+            gone = {r.req_id for r in admitted}
+            self.waiting = [r for r in self.waiting if r.req_id not in gone]
+
+    # -------------------------------------------------------------- preemption
+    def _preempt_one(self):
+        """Recompute policy: victim = ``max`` by the policy's
+        ``victim_key``.  Every shipped policy inherits the default —
+        latest arrival, i.e. the running request that loses the least
+        decode progress to recompute."""
+        self._preempt(max(self.running, key=self.policy.victim_key))
+
+    def _preempt(self, victim: Request):
+        self.running.remove(victim)
+        # retract cache entries this request indexed at admission whose
+        # KV was never executed: they must not outlive it as
+        # matchable-but-garbage blocks
+        pairs = self._provisional.pop(victim.req_id, None)
+        dropped = (self.prefix_cache.retract(pairs, self.bm)
+                   if pairs and self.prefix_cache is not None else [])
+        self.bm.free(victim.req_id)
+        self._pending_hashes.pop(victim.req_id, None)
+        self._inserted_blocks.pop(victim.req_id, None)
+        victim.state = RequestState.PREEMPTED
+        victim.n_preemptions += 1
+        victim.output_len = 0                      # recompute from scratch
+        victim.output_tokens.clear()
+        victim.prefilled_len = 0
+        self.waiting.append(victim)
+        self.stats.n_preempted += 1
+        self.stats.recent_oom = True
+        if self.on_preempt is not None:
+            self.on_preempt(victim)
+        if dropped:
+            # cascade: a same-plan admission that matched the retracted
+            # blocks holds references to KV that will never be written
+            # (possible when the policy admits out of arrival order)
+            garbage = set(dropped)
+            for r in [r for r in self.running
+                      if garbage.intersection(self.bm.block_table(r.req_id))]:
+                if r in self.running:
+                    self._preempt(r)
+
+    def _ensure_growable(self):
+        """The whole executing batch needs room to grow one token this
+        step (cumulative blocks, not per-request).  Under pressure, cold
+        cached blocks are evicted before any running request is preempted
+        — recompute is far costlier than losing a cache entry."""
+        def deficit():
+            need = sum(
+                max(self.bm.blocks_needed(r.total_len + 1)
+                    - len(self.bm.block_table(r.req_id)), 0)
+                for r in self.running[: self.max_batch])
+            return need - self.bm.free_blocks
+
+        while self.running and deficit() > 0:
+            if (self.prefix_cache is not None
+                    and self.prefix_cache.evict(self.bm, deficit())):
+                continue
+            self._preempt_one()
+
+    # ------------------------------------------------------------ composition
+    def plan(self, now: float) -> Optional[IterationPlan]:
+        """Compose one continuous-batching iteration: admit, make the
+        batch growable, then hand out prefill chunks under the token
+        budget and pick the decode set.  Returns None when idle."""
+        budget = self.prefill_chunk_tokens
+        self._admit(now)
+        if not self.running:
+            return None
+        self._ensure_growable()
+        if not self.running:
+            return None
+
+        chunks: List[PrefillChunk] = []
+        prefill_tokens = 0
+        context_tokens = 0
+        left = budget
+        # budget is handed out in admission order (FIFO over the running
+        # set), NOT re-sorted by policy each iteration: admission is
+        # already policy-ordered, and run-to-completion finishes the
+        # earliest-admitted prefill soonest — re-prioritizing mid-flight
+        # processor-shares the budget across prompts, which measurably
+        # delays every prefill completion (benchmarks/chunked_prefill.py
+        # regresses ~17% p99 with policy-order handout)
+        for r in self.running:
+            rem = r.prompt_len - r.prefilled_len
+            if rem <= 0:
+                continue
+            take = rem if left is None else min(rem, left)
+            if take <= 0:
+                break
+            start = r.prefilled_len
+            if take < rem:
+                # align the chunk END (start + take) to a block boundary:
+                # the engine's suffix-prefill jit cache is keyed on
+                # (chunk_len, resident_len), and end-alignment makes those
+                # pairs recur across requests even when leftover budget
+                # spills a sub-budget first chunk into the next prompt.
+                # A budget below block_size cannot align and simply pays
+                # one compile per shape.
+                aligned = take - (start + take) % self.bm.block_size
+                if aligned > 0:
+                    take = aligned
+            chunks.append(PrefillChunk(r, start, start + take,
+                                       is_last=start + take == r.prompt_len))
+            r.prefilled_len = start + take
+            prefill_tokens += take
+            context_tokens += start
+            self.stats.prefill_tokens += take
+            if left is not None:
+                left -= take
+            self._register_written_blocks(r)
+            if start + take == r.prompt_len:
+                # the chunk completing the prompt executes this very
+                # iteration: admission-time inserts are now backed by KV
+                self._provisional.pop(r.req_id, None)
+
+        decode: List[Request] = []
+        cow: List[Tuple[int, int]] = []
+        for r in self.running[: self.max_batch]:
+            if r.prefilled_len < r.prompt_len:
+                continue
+            self.bm.allocate(r.req_id, r.total_len + 1)
+            if self.prefix_cache is not None:
+                # decode writes at r.total_len: that page must be private
+                pair = self.bm.copy_on_write(
+                    r.req_id, r.total_len // self.bm.block_size)
+                if pair is not None:
+                    cow.append(pair)
+            decode.append(r)
+        if not chunks and not decode:
+            return None
+        return IterationPlan(chunks, decode, cow, prefill_tokens,
+                             context_tokens)
+
+    def _register_written_blocks(self, req: Request):
+        """Chunked prefill: once a prompt block's KV is fully computed it
+        may be shared — register it with the prefix cache.  (Admission
+        matches run before chunk composition, so a match can never see a
+        block whose KV has not been executed by the backend.)"""
+        hashes = self._pending_hashes.get(req.req_id)
+        if hashes is None:
+            return
+        done = min(req.prefilled_len // self.bm.block_size, len(hashes))
+        ins = self._inserted_blocks[req.req_id]
+        if done > ins:
+            table = self.bm.block_table(req.req_id)
+            self.prefix_cache.insert(hashes[ins:done], table[ins:done],
+                                     self.bm)
+            self._inserted_blocks[req.req_id] = done
+        if req.prefilled_len >= req.prompt_len:
+            self._pending_hashes.pop(req.req_id, None)
+            self._inserted_blocks.pop(req.req_id, None)
+
+    # ------------------------------------------------------------------ finish
+    def finish(self, req: Request, t: float):
+        """Backend reports a completed request: release memory + book it."""
+        req.state = RequestState.FINISHED
+        req.finish_time = t
+        self.bm.free(req.req_id)
+        self.running.remove(req)
+        self._pending_hashes.pop(req.req_id, None)
+        self._inserted_blocks.pop(req.req_id, None)
+        self._provisional.pop(req.req_id, None)
+        self.stats.n_finished += 1

@@ -11,9 +11,6 @@ KV memory in use / capacity, running/waiting counts, preemption counter.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-import functools
 import time
 from typing import Callable, List, Optional
 
@@ -21,15 +18,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.core.scheduler import SchedulerPolicy
 from repro.kernels import ops as kops
 from repro.models import attention as attn_mod
 from repro.models.layers import embed_tokens, lm_logits, rms_norm, swiglu
 from repro.models.model import LanguageModel
 from repro.models.moe import moe_ffn
-from repro.serving.kv_cache import BlockManager, NoFreeBlocks
+from repro.serving.batch_scheduler import (
+    BatchScheduler,
+    SchedStats,
+    TokenPrefixMatcher,
+)
+from repro.serving.kv_cache import BlockManager
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.request import Request, RequestState
+from repro.serving.request import Request
 
 
 # =============================================================================
@@ -76,24 +78,27 @@ class PagedModelRunner:
         self.pool = self.pool.at[:, :, bt].set(kv)
         return logits[0]
 
-    # -- suffix prefill: reuse cached prefix KV, compute only new tokens ------
+    # -- chunk prefill: attend over resident KV, compute only new tokens ------
     def prefill_suffix(self, tokens: jnp.ndarray, block_table: List[int],
                        n_cached: int):
-        """tokens (S,) = the uncached suffix; block_table covers the whole
-        prompt (cached prefix blocks first).  The suffix attends to the
-        prefix KV already resident in the pool; only suffix KV is written.
-        ``n_cached`` must be a positive multiple of block_size (the prefix
-        cache only shares full blocks)."""
+        """tokens (S,) = the next prompt chunk; block_table covers the
+        whole prompt.  The chunk attends over the ``n_cached`` tokens
+        already resident in the pool (shared cached prefix and/or earlier
+        chunks of this prompt) plus itself; only the chunk's KV is
+        written.  ``n_cached`` may be any value >= 0 — chunk boundaries
+        need not align to blocks (the last resident block may be
+        partially filled and is completed in place)."""
         s = tokens.shape[0]
         bs = self.block_size
-        assert n_cached > 0 and n_cached % bs == 0 and s > 0
-        nbp = n_cached // bs
-        nb_total = -(-(n_cached + s) // bs)
-        prefix_bt = jnp.asarray(block_table[:nbp], jnp.int32)
-        suffix_bt = jnp.asarray(block_table[nbp:nb_total], jnp.int32)
+        assert s > 0 and 0 <= n_cached
+        n_ctx_blocks = -(-n_cached // bs)
+        ctx_bt = jnp.asarray(block_table[:n_ctx_blocks], jnp.int32)
+        write_idx = jnp.asarray(
+            [block_table[p // bs] * bs + p % bs
+             for p in range(n_cached, n_cached + s)], jnp.int32)
         logits, self.pool = self._suffix_fn(
             self.params, self.pool, jnp.asarray(tokens, jnp.int32),
-            prefix_bt, suffix_bt)
+            ctx_bt, write_idx, n_cached)
         return logits
 
     def copy_block(self, src: int, dst: int):
@@ -103,15 +108,12 @@ class PagedModelRunner:
     def _build_suffix_prefill(self):
         cfg = self.cfg
         hd = cfg.resolved_head_dim
-        bs = self.block_size
 
-        def step(params, pool, tokens, prefix_bt, suffix_bt):
+        def step(params, pool, tokens, ctx_bt, write_idx, n_cached):
             s = tokens.shape[0]
-            p_len = prefix_bt.shape[0] * bs
-            nbs = suffix_bt.shape[0]
-            positions = p_len + jnp.arange(s, dtype=jnp.int32)
+            positions = n_cached + jnp.arange(s, dtype=jnp.int32)
             sin, cos = attn_mod.rope_at(positions, hd, cfg.rope_theta)
-            k_pos = jnp.arange(p_len + s, dtype=jnp.int32)
+            k_pos = jnp.arange(n_cached + s, dtype=jnp.int32)
             bias = jnp.where(positions[:, None] >= k_pos[None, :],
                              0.0, attn_mod.NEG_INF)[None, None, None]
             x = embed_tokens(params, tokens[None]).astype(pool.dtype)  # (1,S,d)
@@ -122,9 +124,13 @@ class PagedModelRunner:
                 q, k, v = attn_mod._project_qkv(lp["attn"], h, h, cfg)
                 q = attn_mod.apply_rope(q, sin, cos)
                 k = attn_mod.apply_rope(k, sin, cos)
-                # prefix K/V: gather cached pages (already rope'd at write)
-                pk = pool_layer[0][prefix_bt].reshape(p_len, cfg.num_kv_heads, hd)
-                pv = pool_layer[1][prefix_bt].reshape(p_len, cfg.num_kv_heads, hd)
+                # resident K/V: gather the covering pages (already rope'd
+                # at write), keep the first n_cached rows — the last page
+                # may be partially filled by an earlier chunk
+                pk = pool_layer[0][ctx_bt].reshape(
+                    -1, cfg.num_kv_heads, hd)[:n_cached]
+                pv = pool_layer[1][ctx_bt].reshape(
+                    -1, cfg.num_kv_heads, hd)[:n_cached]
                 kf = jnp.concatenate([pk[None], k], axis=1)   # (1, P+S, kv, hd)
                 vf = jnp.concatenate([pv[None], v], axis=1)
                 scores = attn_mod._gqa_scores(q, kf)
@@ -139,16 +145,15 @@ class PagedModelRunner:
                 return xx + f, jnp.stack([k[0], v[0]])        # (2, S, kv, hd)
 
             x, kvs = jax.lax.scan(body, x, (params["layers"], pool))
-            # scatter only the new suffix KV into its (private) pages
-            pad = nbs * bs - s
-            kvs = jnp.pad(kvs, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
-            kvs = kvs.reshape(kvs.shape[0], 2, nbs, bs, cfg.num_kv_heads, hd)
-            pool = pool.at[:, :, suffix_bt].set(kvs)
+            # scatter the chunk's KV at its exact token slots — per-token
+            # flat indices, so chunks may start or end mid-block
+            flat = pool.reshape(*pool.shape[:2], -1, cfg.num_kv_heads, hd)
+            pool = flat.at[:, :, write_idx].set(kvs).reshape(pool.shape)
             x = rms_norm(x, params["final_norm"], cfg.norm_eps)
             logits = lm_logits(params, x[:, -1], cfg)
             return logits[0], pool
 
-        return jax.jit(step)
+        return jax.jit(step, static_argnames=("n_cached",))
 
     # -- batched paged decode --------------------------------------------------
     def _build_decode(self):
@@ -213,24 +218,28 @@ class PagedModelRunner:
 # Continuous-batching engine
 # =============================================================================
 
-
-@dataclasses.dataclass
-class EngineStats:
-    n_finished: int = 0
-    n_preempted: int = 0
-    n_admitted: int = 0
-    recent_oom: bool = False      # set on preemption; cleared by monitor reads
-    prefill_tokens: int = 0       # prompt tokens actually prefilled
-    prefill_tokens_saved: int = 0  # prompt tokens served from the prefix cache
+# back-compat alias: engine stats now live on the shared batch scheduler
+EngineStats = SchedStats
 
 
 class LLMEngine:
-    """One LLM instance: waiting queue -> continuous batch -> completions."""
+    """One LLM instance: a :class:`BatchScheduler` drives the runner.
+
+    All scheduling decisions — admission order (``policy``, default
+    FCFS), prefix-cache matching, block accounting, growth / eviction /
+    preemption, and chunked-prefill batch composition
+    (``prefill_chunk_tokens``: per-iteration prefill token budget,
+    ``None`` = monolithic) — live in
+    :class:`repro.serving.batch_scheduler.BatchScheduler`, shared verbatim
+    with the discrete-event simulator's ``SimInstance``; this class only
+    executes the plans with real tokens."""
 
     def __init__(self, runner: PagedModelRunner, instance_id: int = 0,
                  max_batch: int = 8, eos_token: int = -1,
                  clock: Callable[[], float] = time.monotonic,
-                 enable_prefix_cache: bool = False):
+                 enable_prefix_cache: bool = False,
+                 policy: Optional[SchedulerPolicy] = None,
+                 prefill_chunk_tokens: Optional[int] = None):
         self.runner = runner
         self.bm = BlockManager(runner.num_blocks, runner.block_size)
         self.prefix_cache = (PrefixCache(runner.block_size)
@@ -239,10 +248,25 @@ class LLMEngine:
         self.max_batch = max_batch
         self.eos_token = eos_token
         self.clock = clock
-        self.waiting: collections.deque[Request] = collections.deque()
-        self.running: List[Request] = []
-        self.stats = EngineStats()
         self._next_tok: dict[int, int] = {}
+        self.sched = BatchScheduler(
+            self.bm, policy=policy, prefix_cache=self.prefix_cache,
+            matcher=TokenPrefixMatcher(), max_running=max_batch,
+            max_batch=runner.max_batch,
+            prefill_chunk_tokens=prefill_chunk_tokens,
+            on_preempt=lambda r: self._next_tok.pop(r.req_id, None))
+
+    @property
+    def waiting(self) -> List[Request]:
+        return self.sched.waiting
+
+    @property
+    def running(self) -> List[Request]:
+        return self.sched.running
+
+    @property
+    def stats(self) -> SchedStats:
+        return self.sched.stats
 
     # ---------------------------------------------------------------- monitor
     @property
@@ -267,113 +291,39 @@ class LLMEngine:
 
     # ---------------------------------------------------------------- intake
     def submit(self, req: Request):
-        req.state = RequestState.WAITING
         req.instance_id = self.instance_id
-        self.waiting.append(req)
+        self.sched.submit(req)
 
     # ---------------------------------------------------------------- stepping
-    def _admit(self):
-        while self.waiting and len(self.running) < self.max_batch:
-            req = self.waiting[0]
-            cache = self.prefix_cache
-            hashes: List[int] = []
-            cached: List[int] = []
-            if cache is not None:
-                if req.prefix_hashes is None:
-                    req.prefix_hashes = PrefixCache.hash_tokens(
-                        req.prompt_tokens, self.bm.block_size)
-                hashes = req.prefix_hashes
-                cached = cache.match(
-                    hashes[:cache.usable_prefix_blocks(req.prompt_len)], self.bm)
-            need = self.bm.blocks_needed(req.prompt_len + 1) - len(cached)
-            if need > self.bm.free_blocks and cache is not None:
-                cache.evict(self.bm, need - self.bm.free_blocks)
-            if need > self.bm.free_blocks:
-                for b in cached:          # abort: hand the refs back
-                    self.bm.ref_release(b)
-                break
-            self.waiting.popleft()
-            n_cached = len(cached) * self.bm.block_size
-            if cached:
-                table = self.bm.allocate_shared(req.req_id, cached,
-                                                req.prompt_len + 1)
-            else:
-                table = self.bm.allocate(req.req_id, req.prompt_len + 1)
-            toks = jnp.asarray(req.prompt_tokens, jnp.int32)
-            if n_cached:
-                logits = self.runner.prefill_suffix(toks[n_cached:], table,
-                                                    n_cached)
-            else:
-                logits = self.runner.prefill(toks, table)
-            if cache is not None:
-                full = req.prompt_len // self.bm.block_size
-                cache.insert(hashes[:full], table[:full], self.bm)
-                cache.note_admitted(len(cached), bool(hashes))
-            req.cached_prefix_len = n_cached
-            self.stats.prefill_tokens += req.prompt_len - n_cached
-            self.stats.prefill_tokens_saved += n_cached
-            self._next_tok[req.req_id] = int(jnp.argmax(logits))
-            if req.exec_start_time < 0:
-                req.exec_start_time = self.clock()
-            req.state = RequestState.RUNNING
-            self.running.append(req)
-            self.stats.n_admitted += 1
-
-    def _preempt_one(self):
-        """vLLM recompute policy: victim = latest-arrived running request."""
-        victim = max(self.running, key=lambda r: (r.arrival_time, r.req_id))
-        self.running.remove(victim)
-        self.bm.free(victim.req_id)
-        self._next_tok.pop(victim.req_id, None)
-        victim.state = RequestState.PREEMPTED
-        victim.n_preemptions += 1
-        victim.output_len = 0                      # recompute from scratch
-        victim.output_tokens.clear()
-        self.waiting.appendleft(victim)
-        self.stats.n_preempted += 1
-        self.stats.recent_oom = True
-
-    def _ensure_growable(self):
-        """The whole running batch needs room to grow one token this step
-        (cumulative blocks, not per-request).  Under pressure, cold cached
-        blocks are evicted before any running request is preempted —
-        recompute is far costlier than losing a cache entry."""
-        def deficit():
-            need = sum(
-                max(self.bm.blocks_needed(r.total_len + 1)
-                    - len(self.bm.block_table(r.req_id)), 0)
-                for r in self.running[: self.runner.max_batch])
-            return need - self.bm.free_blocks
-
-        while self.running and deficit() > 0:
-            if (self.prefix_cache is not None
-                    and self.prefix_cache.evict(self.bm, deficit())):
-                continue
-            self._preempt_one()
-
     def step(self) -> List[Request]:
         """One continuous-batching iteration; returns finished requests."""
-        self._admit()
-        if not self.running:
+        plan = self.sched.plan(self.clock())
+        if plan is None:
             return []
-        self._ensure_growable()
-        if not self.running:
+        # prefill chunks, in plan order: a chunk may attend shared blocks
+        # written by an earlier chunk of this very iteration
+        for c in plan.chunks:
+            toks = jnp.asarray(
+                np.asarray(c.req.prompt_tokens)[c.start:c.end], jnp.int32)
+            table = self.bm.block_table(c.req.req_id)
+            if c.start == 0 and c.is_last:
+                logits = self.runner.prefill(toks, table)
+            else:
+                logits = self.runner.prefill_suffix(toks, table, c.start)
+            if c.is_last:
+                self._next_tok[c.req.req_id] = int(jnp.argmax(logits))
+        for src, dst in plan.cow:
+            self.runner.copy_block(src, dst)
+        if not plan.decode:
             return []
         b = self.runner.max_batch
-        batch = self.running[:b]
+        batch = plan.decode
         nbmax = max(len(self.bm.block_table(r.req_id)) + 1 for r in batch)
         tokens = np.zeros((b,), np.int32)
         positions = np.zeros((b,), np.int32)
         tables = np.zeros((b, nbmax), np.int32)
         live = np.zeros((b,), bool)
         for i, r in enumerate(batch):
-            self.bm.allocate(r.req_id, r.total_len + 1)
-            if self.prefix_cache is not None:
-                # decode writes at r.total_len: that page must be private
-                cow = self.bm.copy_on_write(
-                    r.req_id, r.total_len // self.bm.block_size)
-                if cow is not None:
-                    self.runner.copy_block(*cow)
             t = self.bm.block_table(r.req_id)
             tables[i, :len(t)] = t
             tokens[i] = self._next_tok[r.req_id]
@@ -389,13 +339,9 @@ class LLMEngine:
             done = (r.output_len >= r.max_new_tokens
                     or (self.eos_token >= 0 and int(nxt[i]) == self.eos_token))
             if done:
-                r.state = RequestState.FINISHED
-                r.finish_time = self.clock()
-                self.bm.free(r.req_id)
+                self.sched.finish(r, self.clock())
                 self._next_tok.pop(r.req_id, None)
-                self.running.remove(r)
                 finished.append(r)
-                self.stats.n_finished += 1
         return finished
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:

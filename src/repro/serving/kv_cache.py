@@ -55,6 +55,13 @@ class BlockManager:
         return len(self._parked)
 
     @property
+    def hard_used_blocks(self) -> int:
+        """Blocks that cannot be reclaimed without hurting a sequence:
+        used minus zero-ref parked cache blocks (admission watermarks
+        count only these)."""
+        return self.used_blocks - len(self._parked)
+
+    @property
     def active_blocks(self) -> int:
         return len(self._ref)
 
@@ -117,6 +124,15 @@ class BlockManager:
         self._parked.discard(block)
         self._cacheable.discard(block)
         self._free.append(block)
+
+    def unmark_cacheable(self, block: int):
+        """Cache retraction: the index entry backed by this block was
+        dropped, so it must free — not park — when its references
+        release.  An already-parked block is reclaimed immediately."""
+        self._cacheable.discard(block)
+        if block in self._parked:
+            self._parked.discard(block)
+            self._free.append(block)
 
     # ------------------------------------------------------------- operations
     def allocate(self, seq_id: int, num_tokens: int) -> List[int]:

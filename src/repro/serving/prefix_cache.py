@@ -131,16 +131,35 @@ class PrefixCache:
             self.stats.misses += 1
 
     def insert(self, hashes: Sequence[int], table: Sequence[int],
-               bm: BlockManager):
+               bm: BlockManager) -> List[tuple]:
         """Register freshly prefilled full blocks: hashes[i] -> table[i].
         Already-indexed hashes are kept (first writer wins; the colliding
-        block stays private to its sequence)."""
+        block stays private to its sequence).  Returns the ``(hash,
+        block)`` pairs actually inserted, so a caller that indexed blocks
+        ahead of KV execution can :meth:`retract` them on preemption."""
+        inserted = []
         for h, b in zip(hashes, table):
             if h in self._index:
                 continue
             self._index[h] = b
             bm.mark_cacheable(b)
             self.stats.n_inserted += 1
+            inserted.append((h, b))
+        return inserted
+
+    def retract(self, pairs: Sequence[tuple], bm: BlockManager) -> List[int]:
+        """De-index entries whose KV was never written (a request whose
+        admission inserted them was preempted before its prefill
+        executed).  Returns the blocks dropped from the index; they will
+        free — not park — once their references release."""
+        dropped = []
+        for h, b in pairs:
+            if self._index.get(h) != b:
+                continue
+            del self._index[h]
+            bm.unmark_cacheable(b)
+            dropped.append(b)
+        return dropped
 
     # ------------------------------------------------------------------ evict
     def evict(self, bm: BlockManager, n_blocks: int) -> int:

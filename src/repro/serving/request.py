@@ -15,6 +15,17 @@ from typing import Optional
 _req_counter = itertools.count()
 
 
+def reset_request_ids():
+    """Restart the process-global request-id counter at zero.
+
+    Request ids are tie-breakers in scheduling sort keys and preemption
+    victim choice, so harnesses that need reproducible trajectories (the
+    discrete-event simulator, property tests) call this instead of
+    reaching into the private counter."""
+    global _req_counter
+    _req_counter = itertools.count()
+
+
 class RequestState(enum.Enum):
     QUEUED = "queued"          # waiting at the load balancer
     WAITING = "waiting"        # dispatched to an instance, not yet admitted
@@ -57,6 +68,9 @@ class Request:
 
     # --- runtime state --------------------------------------------------------
     state: RequestState = RequestState.QUEUED
+    prefilled_len: int = 0          # prompt tokens whose KV is resident
+    #                                 (cached prefix + executed prefill
+    #                                 chunks); == prompt_len once decodable
     output_len: int = 0
     n_preemptions: int = 0
     instance_id: int = -1

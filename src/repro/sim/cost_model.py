@@ -6,17 +6,23 @@ the *relative* agent behaviour (Figs 3–6) is hardware-independent, and
 only these constants set the absolute scale.
 
 One continuous-batching iteration with `n_decode` decoding sequences,
-`prefill_tokens` newly admitted prompt tokens, and `cached_tokens` prompt
-tokens served from the shared-prefix KV cache costs
+`prefill_tokens` newly computed prompt tokens, `cached_tokens` resident
+tokens that prefill work attends over without recomputing (shared-prefix
+cache hits and, under chunked prefill, the already-prefilled context of
+later chunks), and `n_prefill_seqs` prompt segments in the batch costs
 
     t = t_base + beta * n_decode + gamma * prefill_tokens
-             + gamma_cached * cached_tokens                    [seconds]
+             + gamma_cached * cached_tokens
+             + beta_prefill * n_prefill_seqs                   [seconds]
 
 which reproduces the paper's two key observations: decode dominates
 (>96.6% of latency for typical output lengths) and per-request decode
-speed is roughly constant (Eq. 1's slope `k`).  A cache-hit prefix token
-costs only the page-table plumbing and the extra attention context of the
-suffix prefill — roughly 5% of recomputing it (`gamma_cached`).
+speed is roughly constant (Eq. 1's slope `k`).  An attended-but-resident
+token costs only the page-table plumbing and the extra attention context
+— roughly 5% of recomputing it (`gamma_cached`) — which is exactly the
+re-read overhead chunked prefill trades for not head-of-line-blocking the
+decode batch.  `beta_prefill` is the per-segment overhead of mixing a
+prompt chunk into an iteration (kernel launch / pipeline bubble).
 """
 from __future__ import annotations
 
@@ -29,13 +35,16 @@ class CostModel:
     t_base: float = 0.008          # fixed per-iteration overhead (s)
     beta: float = 0.0012           # per decoding sequence (s)
     gamma: float = 0.00015         # per prefill token (s)
-    gamma_cached: float = 0.0000075  # per cache-hit prefix token (s)
+    gamma_cached: float = 0.0000075  # per attended resident token (s)
+    beta_prefill: float = 0.0004   # per prefill segment in a mixed batch (s)
 
     def iteration_time(self, n_decode: int, prefill_tokens: int,
-                       cached_tokens: int = 0) -> float:
+                       cached_tokens: int = 0,
+                       n_prefill_seqs: int = 0) -> float:
         return (self.t_base + self.beta * n_decode
                 + self.gamma * prefill_tokens
-                + self.gamma_cached * cached_tokens)
+                + self.gamma_cached * cached_tokens
+                + self.beta_prefill * n_prefill_seqs)
 
     def decode_tok_per_s(self, typical_batch: int = 8) -> float:
         """Per-request decode speed at a typical batch (Eq. 1 `k`)."""
@@ -45,6 +54,6 @@ class CostModel:
 LLAMA3_8B = CostModel("llama3-8b")
 # 13B-class: ~1.7x per-token cost, same structure (§7.5 scalability study)
 LLAMA2_13B = CostModel("llama2-13b", t_base=0.013, beta=0.0021, gamma=0.00026,
-                       gamma_cached=0.000013)
+                       gamma_cached=0.000013, beta_prefill=0.0007)
 
 COST_MODELS = {m.name: m for m in (LLAMA3_8B, LLAMA2_13B)}

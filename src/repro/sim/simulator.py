@@ -10,7 +10,6 @@ preemption-by-recompute.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import heapq
 import itertools
@@ -29,13 +28,15 @@ from repro.core import (
     Orchestrator,
     OracleScheduler,
     RoundRobinDispatcher,
+    SchedulerPolicy,
     TimeSlotDispatcher,
     TopoScheduler,
 )
 from repro.core.orchestrator import HardwareProfile
+from repro.serving.batch_scheduler import BatchScheduler, KeyPrefixMatcher
 from repro.serving.kv_cache import BlockManager
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.request import CompletionRecord, Request, RequestState
+from repro.serving.request import CompletionRecord, Request, reset_request_ids
 from repro.sim.cost_model import LLAMA3_8B, CostModel
 from repro.sim.workload import AppSpec, arrival_times
 
@@ -49,149 +50,92 @@ BALANCER_PERIOD = 0.05      # retry period when requests sit in the queue (s)
 
 
 class SimInstance:
+    """One simulated LLM instance: the shared
+    :class:`~repro.serving.batch_scheduler.BatchScheduler` makes every
+    admission / eviction / preemption / batch-composition decision
+    (identical code to the real :class:`~repro.serving.LLMEngine`); this
+    class only prices each composed iteration with the calibrated
+    :class:`CostModel` and advances sampled output lengths."""
+
     def __init__(self, instance_id: int, cost: CostModel,
                  kv_capacity_tokens: int, block_size: int = 16,
-                 max_batch: int = 16, prefix_caching: bool = False):
+                 max_batch: int = 16, prefix_caching: bool = False,
+                 policy: Optional[SchedulerPolicy] = None,
+                 prefill_chunk_tokens: Optional[int] = None):
         self.instance_id = instance_id
         self.cost = cost
         self.bm = BlockManager(kv_capacity_tokens // block_size, block_size)
         self.cache = PrefixCache(block_size) if prefix_caching else None
-        self.max_batch = max_batch
-        self.waiting: collections.deque[Request] = collections.deque()
-        self.running: List[Request] = []
-        self.n_preempted = 0
-        self.recent_oom = False
         self.busy = False
-        self.prefill_tokens_total = 0
-        self.prefill_tokens_saved = 0
+        self.sched = BatchScheduler(
+            self.bm, policy=policy, prefix_cache=self.cache,
+            matcher=KeyPrefixMatcher(), max_running=max_batch,
+            prefill_chunk_tokens=prefill_chunk_tokens)
 
     # ------------------------------------------------------------------ intake
     def submit(self, req: Request):
-        req.state = RequestState.WAITING
         req.instance_id = self.instance_id
-        self.waiting.append(req)
+        self.sched.submit(req)
 
-    def can_admit(self, req: Request, watermark: float = 0.90) -> bool:
-        """Immediate admission capacity: batch slot + prompt memory below a
-        high-watermark (vLLM-style hysteresis against growth thrash).
-        Zero-ref cached blocks are reclaimable, so they don't count against
-        the watermark."""
-        if len(self.running) + len(self.waiting) >= self.max_batch:
-            return False
-        pending = sum(r.prompt_len + 1 for r in self.waiting)
-        need = self.bm.blocks_needed(req.prompt_len + 1 + pending)
-        hard_used = self.bm.used_blocks - self.bm.cached_blocks
-        budget = int(self.bm.num_blocks * watermark) - hard_used
-        return need <= budget
+    def can_admit(self, req: Request,
+                  watermark: Optional[float] = None) -> bool:
+        return self.sched.can_admit(req, watermark)
 
-    # ------------------------------------------------------------------ policy
-    def _preempt_one(self, now: float):
-        victim = max(self.running, key=lambda r: (r.arrival_time, r.req_id))
-        self.running.remove(victim)
-        self.bm.free(victim.req_id)
-        victim.state = RequestState.PREEMPTED
-        victim.n_preemptions += 1
-        victim.output_len = 0                     # recompute from scratch
-        self.waiting.appendleft(victim)
-        self.n_preempted += 1
-        self.recent_oom = True
+    # ----------------------------------------------------------------- monitor
+    @property
+    def max_batch(self) -> int:
+        return self.sched.max_batch
 
-    def _ensure_growable(self, now: float):
-        def deficit():
-            need = sum(
-                max(self.bm.blocks_needed(r.total_len + 1)
-                    - len(self.bm.block_table(r.req_id)), 0)
-                for r in self.running[: self.max_batch])
-            return need - self.bm.free_blocks
+    @property
+    def waiting(self) -> List[Request]:
+        return self.sched.waiting
 
-        while self.running and deficit() > 0:
-            # cold cache first: evicting a parked block is free, while
-            # preemption throws away all of the victim's decode progress
-            if self.cache is not None and self.cache.evict(self.bm, deficit()):
-                continue
-            self._preempt_one(now)
+    @property
+    def running(self) -> List[Request]:
+        return self.sched.running
 
-    # ------------------------------------------------------------------ step
-    def _match_prefix(self, req: Request):
-        """Longest cached shared-prefix match for a sim request (only the
-        declared system-prompt prefix is content-identical across calls)."""
-        if self.cache is None or not req.cache_key or req.shared_prefix_len <= 0:
-            return [], []
-        n_blocks = min(req.prompt_len - 1, req.shared_prefix_len) \
-            // self.bm.block_size
-        hashes = PrefixCache.key_chain(req.cache_key, n_blocks)
-        return hashes, self.cache.match(hashes, self.bm)
+    @property
+    def n_preempted(self) -> int:
+        return self.sched.stats.n_preempted
 
-    def step(self, now: float) -> Tuple[List[Request], Optional[float]]:
-        """Run one continuous-batching iteration starting at `now`.
-        Returns (requests finished at now+dt, dt) or ([], None) if idle."""
-        prefill_tokens = 0
-        cached_tokens = 0
-        watermark_blocks = int(self.bm.num_blocks * 0.95)
-        while self.waiting and len(self.running) < self.max_batch:
-            req = self.waiting[0]
-            hashes, cached = self._match_prefix(req)
-            need = self.bm.blocks_needed(req.prompt_len + 1) - len(cached)
-            # watermark first: it ignores reclaimable cached blocks, so
-            # eviction can't satisfy it — evicting before checking would
-            # trash the warm cache for nothing
-            hard_used = self.bm.used_blocks - self.bm.cached_blocks
-            if hard_used + need > watermark_blocks:
-                for b in cached:
-                    self.bm.ref_release(b)
-                break
-            if need > self.bm.free_blocks and self.cache is not None:
-                self.cache.evict(self.bm, need - self.bm.free_blocks)
-            if need > self.bm.free_blocks:
-                for b in cached:
-                    self.bm.ref_release(b)
-                break
-            self.waiting.popleft()
-            if cached:
-                table = self.bm.allocate_shared(req.req_id, cached,
-                                                req.prompt_len + 1)
-            else:
-                table = self.bm.allocate(req.req_id, req.prompt_len + 1)
-            if self.cache is not None:
-                if hashes:
-                    self.cache.insert(hashes, table[:len(hashes)], self.bm)
-                self.cache.note_admitted(len(cached), bool(hashes))
-            n_cached = len(cached) * self.bm.block_size
-            req.cached_prefix_len = n_cached
-            if req.exec_start_time < 0:
-                req.exec_start_time = now
-            req.state = RequestState.RUNNING
-            self.running.append(req)
-            prefill_tokens += req.prompt_len - n_cached
-            cached_tokens += n_cached
-        self.prefill_tokens_total += prefill_tokens + cached_tokens
-        self.prefill_tokens_saved += cached_tokens
-        if not self.running:
-            return [], None
-        self._ensure_growable(now)
-        if not self.running:
-            return [], None
-        batch = self.running[: self.max_batch]
-        for r in batch:
-            self.bm.allocate(r.req_id, r.total_len + 1)
-            if self.cache is not None:
-                self.bm.copy_on_write(r.req_id,
-                                      r.total_len // self.bm.block_size)
-        dt = self.cost.iteration_time(len(batch), prefill_tokens, cached_tokens)
-        finished = []
-        for r in batch:
-            r.output_len += 1
-            if r.output_len >= r.true_output_len:
-                r.state = RequestState.FINISHED
-                r.finish_time = now + dt
-                self.bm.free(r.req_id)
-                self.running.remove(r)
-                finished.append(r)
-        return finished, dt
+    @property
+    def recent_oom(self) -> bool:
+        return self.sched.stats.recent_oom
+
+    @recent_oom.setter
+    def recent_oom(self, value: bool):
+        self.sched.stats.recent_oom = value
+
+    @property
+    def prefill_tokens_total(self) -> int:
+        s = self.sched.stats
+        return s.prefill_tokens + s.prefill_tokens_saved
+
+    @property
+    def prefill_tokens_saved(self) -> int:
+        return self.sched.stats.prefill_tokens_saved
 
     @property
     def has_work(self) -> bool:
-        return bool(self.running or self.waiting)
+        return self.sched.has_work
+
+    # ------------------------------------------------------------------ step
+    def step(self, now: float) -> Tuple[List[Request], Optional[float]]:
+        """Run one continuous-batching iteration starting at `now`.
+        Returns (requests finished at now+dt, dt) or ([], None) if idle."""
+        plan = self.sched.plan(now)
+        if plan is None:
+            return [], None
+        dt = self.cost.iteration_time(
+            len(plan.decode), plan.prefill_tokens, plan.context_tokens,
+            n_prefill_seqs=len(plan.chunks))
+        finished = []
+        for r in plan.decode:
+            r.output_len += 1
+            if r.output_len >= r.true_output_len:
+                self.sched.finish(r, now + dt)
+                finished.append(r)
+        return finished, dt
 
 
 # =============================================================================
@@ -212,6 +156,16 @@ class SimConfig:
     seed: int = 0
     warmup_frac: float = 0.1          # excluded from metrics (online learning)
     prefix_caching: bool = False      # shared-prefix KV reuse on instances
+    # instance-level scheduling (batch_scheduler.py): when True, each
+    # instance's waiting queue is ordered by the same policy that orders
+    # the cluster queue (Kairos priorities carry into the serving
+    # iteration); False keeps FCFS instance queues for every policy
+    # (pre-refactor behaviour)
+    instance_priority: bool = True
+    # per-iteration prefill token budget (Sarathi-style chunked prefill);
+    # None = monolithic prefill: a prompt stalls the whole batch for one
+    # iteration, exactly the §2.2 head-of-line pathology
+    prefill_chunk_tokens: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -264,26 +218,34 @@ class SimResults:
 
 
 class Simulation:
+    # policies that carry their ordering into the serving iteration; the
+    # baselines (Parrot/Ayo/ablations) schedule only at the cluster queue
+    # and their instances stay FCFS, faithful to the systems they model
+    INSTANCE_LEVEL_POLICIES = ("kairos", "w/o-packing", "oracle")
+
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
         # reset the global request-id counter so trajectories (tie-breaks
         # in victim selection / sort stability) are reproducible no matter
         # how many requests earlier simulations in this process created
-        import itertools as _it
-        import repro.serving.request as _rq
-        _rq._req_counter = _it.count()
+        reset_request_ids()
         self.rng = np.random.default_rng(cfg.seed)
         hw = HardwareProfile(
             decode_tok_per_s=cfg.cost.decode_tok_per_s(typical_batch=cfg.max_batch // 2),
             kv_capacity_tokens=cfg.kv_capacity_tokens)
         self.orch = Orchestrator(hardware=hw, prefix_caching=cfg.prefix_caching)
+        models = [InstanceModel(i, cfg.kv_capacity_tokens)
+                  for i in range(cfg.n_instances)]
+        self.scheduler, self.dispatcher, strict = self._make_policy(cfg.policy, models)
+        inst_policy = (self.scheduler
+                       if cfg.instance_priority
+                       and cfg.policy in self.INSTANCE_LEVEL_POLICIES
+                       else None)
         self.instances = [
             SimInstance(i, cfg.cost, cfg.kv_capacity_tokens, max_batch=cfg.max_batch,
-                        prefix_caching=cfg.prefix_caching)
+                        prefix_caching=cfg.prefix_caching, policy=inst_policy,
+                        prefill_chunk_tokens=cfg.prefill_chunk_tokens)
             for i in range(cfg.n_instances)]
-        models = [InstanceModel(i.instance_id, cfg.kv_capacity_tokens)
-                  for i in self.instances]
-        self.scheduler, self.dispatcher, strict = self._make_policy(cfg.policy, models)
         self.balancer = LoadBalancer(
             self.scheduler, self.dispatcher, self.orch, self._submit,
             strict_head=strict)
