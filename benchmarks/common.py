@@ -1,12 +1,25 @@
-"""Shared helpers for the per-figure benchmarks."""
+"""Shared helpers for the per-figure benchmarks, including the
+machine-readable BENCH JSON schema the CI perf pipeline consumes:
+
+    {"bench": <suite name>,
+     "config": {<knobs the run used>},
+     "metrics": {<flat name -> number | {...}>},
+     "commit": <git HEAD or "unknown">}
+
+``BENCH_baseline.json`` (committed) is the reference trajectory;
+``BENCH_ci.json`` (uploaded as a CI artifact on every PR) is checked
+against it by ``benchmarks/check_regression.py``.
+"""
 from __future__ import annotations
 
+import json
+import os
+import platform
+import subprocess
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
-import numpy as np
-
-from repro.sim import SimConfig, Simulation, colocated_apps, make_app, run_policy
+from repro.sim import run_policy
 
 Row = Tuple[str, float, str]   # (name, us_per_call, derived)
 
@@ -31,3 +44,38 @@ def pct_gain(base: float, ours: float) -> float:
 
 def row(name: str, seconds_per_call: float, derived: str) -> Row:
     return (name, seconds_per_call * 1e6, derived)
+
+
+# =============================================================================
+# BENCH JSON (perf-tracking CI)
+# =============================================================================
+
+
+def git_commit() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL).strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def bench_host() -> str:
+    """Coarse hardware-class tag: wall-clock numbers are only comparable
+    between runs that share it (the regression gate downgrades wall
+    comparisons across different hosts to advisory)."""
+    return f"{platform.system()}-{platform.machine()}-{os.cpu_count()}cpu"
+
+
+def bench_json(bench: str, config: Dict, metrics: Dict) -> Dict:
+    return {"bench": bench, "config": config, "metrics": metrics,
+            "commit": git_commit(), "host": bench_host()}
+
+
+def write_bench_json(path: str, bench: str, config: Dict, metrics: Dict) -> Dict:
+    doc = bench_json(bench, config, metrics)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc

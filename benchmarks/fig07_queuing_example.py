@@ -6,7 +6,7 @@ Oracle (true-remaining SJF) must be strictly best; Topo in between.
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, row
+from benchmarks.common import row
 
 # (name, exec_units, topo_remaining_stages)
 REQS = [("H", 5.0, 1), ("R1", 1.0, 2), ("M", 2.0, 1), ("R2", 1.0, 2)]

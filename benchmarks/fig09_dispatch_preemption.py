@@ -3,7 +3,7 @@ Round-Robin vs memory-aware dispatching (paper: 18.4% of requests
 preempted, 14.2% of memory wasted at 8 req/s)."""
 from __future__ import annotations
 
-from benchmarks.common import Row, row, sim
+from benchmarks.common import row, sim
 from repro.sim import colocated_apps
 
 

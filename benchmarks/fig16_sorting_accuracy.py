@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import RATE_COLOC, RATE_SINGLE, Row, row, sim
+from benchmarks.common import RATE_COLOC, RATE_SINGLE, Row, row
 from repro.sim import SimConfig, Simulation, colocated_apps, make_app
 
 SCENARIOS_FULL = ([("QA", g) for g in ("G+M", "M+W", "S+S")]

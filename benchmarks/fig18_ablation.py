@@ -5,7 +5,7 @@ Paper: priority gives 1.63x at the 50%-queueing point (38.8–69.6% across
 rates); packing gives 1.12x (9.5–10.6%)."""
 from __future__ import annotations
 
-from benchmarks.common import Row, pct_gain, row, sim
+from benchmarks.common import Row, row, sim
 from repro.sim import colocated_apps
 
 

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 from typing import Dict, List, Optional
 
 PEAK_FLOPS = 197e12          # bf16 per chip

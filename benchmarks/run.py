@@ -2,7 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs every dataset
 group / rate point (longer); default is the quick representative subset.
-Roofline (deliverable g) reads the dry-run artifact: run
+``--json PATH`` additionally writes the collected rows in the BENCH JSON
+schema every figure benchmark shares with the CI perf pipeline (see
+``benchmarks/common.py``).  Roofline (deliverable g) reads the dry-run
+artifact: run
 ``python -m repro.launch.dryrun --all --out experiments/dryrun.json`` first,
 then ``python -m benchmarks.roofline``.
 """
@@ -17,9 +20,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None, help="substring filter on module name")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as BENCH JSON")
     args = ap.parse_args()
 
     from benchmarks import (
+        chunked_prefill,
         fig03_agent_profiles,
         fig07_queuing_example,
         fig08_rank_correlation,
@@ -29,6 +35,7 @@ def main() -> None:
         fig16_sorting_accuracy,
         fig17_larger_llm,
         fig18_ablation,
+        iteration_fusion,
         kernel_bench,
         overhead,
         prefix_reuse,
@@ -37,10 +44,12 @@ def main() -> None:
     modules = [fig03_agent_profiles, fig07_queuing_example, fig08_rank_correlation,
                fig09_dispatch_preemption, fig14_single_app, fig15_colocated,
                fig16_sorting_accuracy, fig17_larger_llm, fig18_ablation,
-               overhead, kernel_bench, prefix_reuse]
+               overhead, kernel_bench, prefix_reuse, chunked_prefill,
+               iteration_fusion]
 
     print("name,us_per_call,derived")
     failures = 0
+    metrics = {}
     for mod in modules:
         name = mod.__name__.split(".")[-1]
         if args.only and args.only not in name:
@@ -50,10 +59,16 @@ def main() -> None:
             rows = mod.run(quick=not args.full)
             for n, us, derived in rows:
                 print(f"{n},{us:.2f},{derived}", flush=True)
+                metrics[n] = {"us_per_call": us, "derived": derived}
         except Exception as e:  # keep the suite going
             failures += 1
             print(f"{name},nan,ERROR: {type(e).__name__}: {e}", flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if args.json:
+        from benchmarks.common import write_bench_json
+        write_bench_json(args.json, "figures",
+                         {"full": args.full, "only": args.only}, metrics)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -4,7 +4,6 @@ pipeline -> model zoo -> Adam train step, on CPU.
     PYTHONPATH=src python examples/train_small.py --steps 60
 """
 import argparse
-import dataclasses
 import sys
 import time
 

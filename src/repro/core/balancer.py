@@ -4,9 +4,8 @@ discrete-event simulator — only the instance objects differ.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List
 
-from repro.core.dispatcher import TimeSlotDispatcher
 from repro.core.orchestrator import Orchestrator
 from repro.core.scheduler import SchedulerPolicy
 from repro.serving.request import Request, RequestState

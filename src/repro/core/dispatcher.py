@@ -16,7 +16,6 @@ them uniformly, with no signature probing.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
 from typing import Dict, List, Optional
 

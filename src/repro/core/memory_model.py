@@ -15,7 +15,6 @@ of attention layers.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import List
 
 

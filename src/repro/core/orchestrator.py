@@ -6,7 +6,7 @@ scheduler and dispatcher.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 from repro.core.distributions import DistributionProfiler
 from repro.core.memory_model import MemoryRamp, make_ramp

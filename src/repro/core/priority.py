@@ -8,11 +8,10 @@ have shorter remaining work and get higher priority (smaller score).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.distributions import wasserstein_1d
 
 ANCHOR = ("__anchor__", "__zero_latency__")
 

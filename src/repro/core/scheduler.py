@@ -10,7 +10,7 @@
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional
+from typing import Callable, List
 
 from repro.serving.request import Request
 

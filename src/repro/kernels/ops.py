@@ -28,3 +28,30 @@ def paged_attention(q, k_pool, v_pool, block_tables, context_lens, backend: str 
     if backend == "interpret":
         return _paged_pallas(q, k_pool, v_pool, block_tables, context_lens, interpret=True)
     return _ref.paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def ragged_segment_attention(q, k_pool, v_pool, block_tables, positions,
+                             backend: str = "ref"):
+    """Segment-blocked causal attention over a paged pool for the prefill
+    part of a fused :class:`~repro.serving.batch_scheduler.IterationBatch`
+    — every chunk's tokens tiled to (S, L).  See ``kernels/ref.py`` for
+    shapes and mask semantics.
+
+    The ragged mask lowers exactly onto the paged *decode* kernel:
+    flattening the (S, L) tile to S*L query rows, repeating each
+    segment's block table per row, and setting each row's context length
+    to ``position + 1`` turns the segment-blocked causal mask into the
+    kernel's ordinary context-length mask — so the same Pallas kernel
+    serves single-token decode and fused mixed iterations, with no
+    second kernel to maintain.
+    """
+    if backend in ("pallas", "interpret"):
+        s, lq, kv, g, hd = q.shape
+        out = _paged_pallas(q.reshape(s * lq, kv, g, hd), k_pool, v_pool,
+                            jnp.repeat(block_tables, lq, axis=0),
+                            positions.reshape(-1) + 1,
+                            interpret=backend == "interpret")
+        return out.reshape(s, lq, kv, g, hd)
+    return _ref.ragged_segment_attention_ref(
+        q, k_pool, v_pool, block_tables, positions)

@@ -41,6 +41,46 @@ def paged_attention_ref(q: jnp.ndarray,
     return out.astype(q.dtype)
 
 
+def ragged_segment_attention_ref(q: jnp.ndarray,
+                                 k_pool: jnp.ndarray,
+                                 v_pool: jnp.ndarray,
+                                 block_tables: jnp.ndarray,
+                                 positions: jnp.ndarray) -> jnp.ndarray:
+    """Segment-blocked causal attention for a fused ragged iteration batch.
+
+    A fused iteration's prefill chunks ("segments") are tiled into a
+    dense (S, L) layout — L is the padded chunk length — so each
+    segment's KV pages are gathered ONCE, not once per query token.
+    Query (s, j) sits at absolute position ``positions[s, j]`` of its
+    sequence and attends the pool-resident KV of *its own* sequence at
+    positions ``<= positions[s, j]`` through its segment's block table —
+    never across segments.  Fresh KV (this iteration's chunk tokens) must
+    already be scattered into the pool: the fused runner writes before
+    attending within each layer, so intra-chunk causality and
+    same-iteration shared-prefix reads both resolve through the pool.
+    Padding rows (j >= the chunk's real length) produce garbage that the
+    caller discards.
+
+    q:            (S, L, KV, G, hd) — grouped queries, tiled per segment
+    k_pool/v_pool:(N_blocks, bs, KV, hd)
+    block_tables: (S, max_blocks)   int32 — one table per segment
+    positions:    (S, L)            int32 absolute position per token
+    returns:      (S, L, KV, G, hd)
+    """
+    s, _, kv, g, hd = q.shape
+    bs = k_pool.shape[1]
+    s_max = block_tables.shape[1] * bs
+    k = k_pool[block_tables].reshape(s, s_max, kv, hd)
+    v = v_pool[block_tables].reshape(s, s_max, kv, hd)
+    scores = jnp.einsum("slkgd,stkd->skglt", q, k).astype(jnp.float32) / (hd ** 0.5)
+    keep = positions[:, None, None, :, None] >= \
+        jnp.arange(s_max)[None, None, None, None, :]
+    scores = jnp.where(keep, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("skglt,stkd->slkgd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
 def chunked_prefill_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                                   window: int | None = None) -> jnp.ndarray:
     """Causal (optionally sliding-window) attention oracle.

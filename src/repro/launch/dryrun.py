@@ -17,7 +17,7 @@ import json
 import re
 import time
 import traceback
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,6 @@ from repro.models import build_model
 from repro.models.sharding import (
     batch_pspec,
     cache_pspecs,
-    dp_axes,
     param_shardings,
     should_fsdp,
 )

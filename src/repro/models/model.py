@@ -16,7 +16,6 @@ Public entry points (all pure):
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

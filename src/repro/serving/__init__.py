@@ -1,10 +1,14 @@
 from repro.serving.batch_scheduler import (
     BatchScheduler,
+    IterationBatch,
     IterationPlan,
     KeyPrefixMatcher,
     PrefillChunk,
     SchedStats,
+    Segment,
     TokenPrefixMatcher,
+    flatten_plan,
+    pad_bucket,
 )
 from repro.serving.engine import LLMEngine, PagedModelRunner
 from repro.serving.kv_cache import BlockManager, NoFreeBlocks
@@ -16,8 +20,9 @@ from repro.serving.request import (
     reset_request_ids,
 )
 
-__all__ = ["BatchScheduler", "IterationPlan", "KeyPrefixMatcher",
-           "PrefillChunk", "SchedStats", "TokenPrefixMatcher",
+__all__ = ["BatchScheduler", "IterationBatch", "IterationPlan",
+           "KeyPrefixMatcher", "PrefillChunk", "SchedStats", "Segment",
+           "TokenPrefixMatcher", "flatten_plan", "pad_bucket",
            "LLMEngine", "PagedModelRunner", "BlockManager", "NoFreeBlocks",
            "PrefixCache", "PrefixCacheStats",
            "CompletionRecord", "Request", "RequestState",

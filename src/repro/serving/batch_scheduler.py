@@ -36,7 +36,9 @@ tokens), the simulator prices it with
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
 
 from repro.core.scheduler import FCFSScheduler, SchedulerPolicy
 from repro.serving.kv_cache import BlockManager
@@ -112,6 +114,178 @@ class IterationPlan:
     cow: List[Tuple[int, int]]
     prefill_tokens: int
     context_tokens: int
+
+
+# =============================================================================
+# flat iteration batch (fused single-dispatch execution)
+# =============================================================================
+
+# Bucket floors for the padded static shapes of an IterationBatch.  Every
+# dimension is rounded up to floor * 2^k, so the set of distinct compiled
+# shapes grows logarithmically with the largest iteration ever composed —
+# the jit cache is bounded by a few dozen entries no matter the workload
+# (guarded by tests/test_fused_iteration.py).
+TOKEN_BUCKET_FLOOR = 4      # chunk-tile length L
+CHUNK_SEG_FLOOR = 1         # chunk-tile rows Sp (each padded row costs a
+#                             whole L of dead compute, so start at 1)
+SEGMENT_BUCKET_FLOOR = 4    # decode rows / sample rows
+TABLE_BUCKET_FLOOR = 4      # block-table width
+COW_BUCKET_FLOOR = 4        # copy-on-write pairs
+
+
+def pad_bucket(n: int, floor: int) -> int:
+    """Smallest floor * 2^k >= n; 0 stays 0 (an absent part of the batch
+    keeps zero-sized static shapes, so e.g. decode-only iterations compile
+    away the prefill computation entirely)."""
+    if n == 0:
+        return 0
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class Segment:
+    """Host-side metadata for one row of an :class:`IterationBatch`:
+    which request the row belongs to and whether its argmax row yields a
+    token the backend must consume (final prefill chunk -> pending first
+    token; decode -> next token)."""
+    req: Request
+    kind: str                  # "prefill" | "decode"
+    emits_token: bool
+
+
+@dataclasses.dataclass
+class IterationBatch:
+    """One iteration flattened into a single ragged device batch.
+
+    All prefill-chunk tokens (arbitrary mid-block start/end, attending
+    cached-prefix KV already resident in the pool) are concatenated with
+    all decode tokens into one flat token batch; per-token metadata maps
+    each row to its segment's block table, absolute position, and KV
+    write slot, so the backend executes the whole iteration in ONE
+    dispatch (segment-blocked causal mask, one KV scatter, one argmax
+    transfer) instead of one dispatch per chunk plus a decode dispatch.
+
+    The batch keeps the prefill part and the decode part as *separate
+    arrays* (concatenated on device): chunk tokens are tiled dense
+    (Sp, L) so each chunk's pages are gathered once — through the short
+    tables covering its own prompt extent — while single decode tokens
+    attend through their full (long) tables via the classic paged decode
+    kernel.  A shared per-token layout would force every chunk token to
+    gather the longest decode context (measured 3-4x more page-copy
+    traffic).  The device row layout is
+    ``[chunk s token j -> s*L + j | decode i -> Sp*L + i]``.
+
+    Arrays are padded to a small set of static bucket shapes
+    (:func:`pad_bucket`) to bound jit recompilation; padding token rows
+    carry an out-of-range ``write_slots`` entry (scatters drop them) and
+    padding segment rows are never consumed (``segments`` covers only
+    real rows: chunks in plan order, then decodes).  An absent part
+    (decode-only or prefill-only iteration) has zero-sized shapes and
+    compiles away.
+    """
+    # -- prefill part: chunks tiled dense (Sp segments x L tokens) -----------
+    tokens_p: np.ndarray      # (Sp, L) int32 prompt-chunk token ids
+    positions_p: np.ndarray   # (Sp, L) int32 absolute position in the sequence
+    tables_p: np.ndarray      # (Sp, nbp) int32: blocks covering each chunk's
+    #                           prompt extent [0, end)
+    # -- decode part (Td rows; each row is its own segment) ------------------
+    tokens_d: np.ndarray      # (Td,) int32 pending next tokens
+    positions_d: np.ndarray   # (Td,) int32 write/attend position (total_len)
+    tables_d: np.ndarray      # (Td, nbd) int32 full sequence tables
+    # -- shared --------------------------------------------------------------
+    write_slots: np.ndarray   # (Sp*L+Td,) int32 flat pool slot (block*bs+off)
+    #                           in device layout; padding -> n_slots (dropped)
+    sample_rows: np.ndarray   # (S,) int32 device-layout row whose logits give
+    #                           each segment's next token (padding -> 0)
+    cow_src: np.ndarray       # (C,) int32 copy-on-write sources (padding -> 0)
+    cow_dst: np.ndarray       # (C,) int32 destinations (padding -> num_blocks,
+    #                           dropped by the copy scatter)
+    segments: List[Segment]   # host metadata, one per REAL segment row
+    n_tokens: int             # real (unpadded) token count
+
+    @property
+    def shape_key(self) -> Tuple[int, ...]:
+        """The static shapes a jit specializes on — distinct keys bound
+        the compile count."""
+        return (*self.tokens_p.shape, self.tables_p.shape[1],
+                len(self.tokens_d), self.tables_d.shape[1],
+                len(self.sample_rows), len(self.cow_src))
+
+
+def flatten_plan(plan: IterationPlan, bm: BlockManager,
+                 next_token: Mapping[int, int]) -> IterationBatch:
+    """Flatten an :class:`IterationPlan` into a single ragged
+    :class:`IterationBatch`.
+
+    ``next_token`` maps req_id -> pending decode token (the backend's
+    sampled-but-not-yet-fed token).  A request whose *final* prefill
+    chunk is in this very plan has no pending token yet — its first
+    decode token is the argmax of that chunk's logits, computed by this
+    same dispatch — so its decode entry is deferred to the next
+    iteration (classic prefill->decode pipelining; the generated token
+    values are unchanged, only the iteration they land in shifts by one).
+    """
+    bs = bm.block_size
+    n_slots = bm.num_blocks * bs
+    segments: List[Segment] = []
+
+    # prefill part: chunks tiled dense (Sp, L), tables trimmed per chunk
+    chunks = plan.chunks
+    sp = pad_bucket(len(chunks), CHUNK_SEG_FLOOR)
+    lp = pad_bucket(max((c.end - c.start for c in chunks), default=0),
+                    TOKEN_BUCKET_FLOOR)
+    nbp = pad_bucket(max((bm.blocks_needed(c.end) for c in chunks), default=0),
+                     TABLE_BUCKET_FLOOR)
+    # decode part: one row per running sequence, full tables
+    just_completed = {c.req.req_id for c in chunks if c.is_last}
+    decode = [r for r in plan.decode if r.req_id not in just_completed]
+    td = pad_bucket(len(decode), SEGMENT_BUCKET_FLOOR)
+    nbd = pad_bucket(max((len(bm.block_table(r.req_id)) for r in decode),
+                         default=0), TABLE_BUCKET_FLOOR)
+
+    tokens_p = np.zeros((sp, lp), np.int32)
+    positions_p = np.zeros((sp, lp), np.int32)
+    tables_p = np.zeros((sp, nbp), np.int32)
+    write_slots = np.full(sp * lp + td, n_slots, np.int32)
+    sample_rows = np.zeros(pad_bucket(len(chunks) + len(decode),
+                                      SEGMENT_BUCKET_FLOOR), np.int32)
+    for s, c in enumerate(chunks):
+        table = np.asarray(bm.block_table(c.req.req_id), np.int32)
+        n = c.end - c.start
+        pos = np.arange(c.start, c.end, dtype=np.int32)
+        tokens_p[s, :n] = np.asarray(c.req.prompt_tokens, np.int32)[c.start:c.end]
+        positions_p[s, :n] = pos
+        tables_p[s, :bm.blocks_needed(c.end)] = table[:bm.blocks_needed(c.end)]
+        write_slots[s * lp:s * lp + n] = table[pos // bs] * bs + pos % bs
+        sample_rows[s] = s * lp + n - 1
+        segments.append(Segment(c.req, "prefill", c.is_last))
+
+    tokens_d = np.zeros(td, np.int32)
+    positions_d = np.zeros(td, np.int32)
+    tables_d = np.zeros((td, nbd), np.int32)
+    for i, r in enumerate(decode):
+        table = bm.block_table(r.req_id)
+        tokens_d[i] = next_token[r.req_id]
+        positions_d[i] = r.total_len
+        tables_d[i, :len(table)] = table
+        write_slots[sp * lp + i] = table[r.total_len // bs] * bs \
+            + r.total_len % bs
+        sample_rows[len(chunks) + i] = sp * lp + i
+        segments.append(Segment(r, "decode", True))
+
+    c_pad = pad_bucket(len(plan.cow), COW_BUCKET_FLOOR)
+    cow_src = np.zeros(c_pad, np.int32)
+    cow_dst = np.full(c_pad, bm.num_blocks, np.int32)
+    for i, (src, dst) in enumerate(plan.cow):
+        cow_src[i], cow_dst[i] = src, dst
+    n_tokens = sum(c.end - c.start for c in chunks) + len(decode)
+    return IterationBatch(tokens_p, positions_p, tables_p,
+                          tokens_d, positions_d, tables_d,
+                          write_slots, sample_rows, cow_src, cow_dst,
+                          segments, n_tokens)
 
 
 @dataclasses.dataclass

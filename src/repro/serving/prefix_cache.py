@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import collections
 import hashlib
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 

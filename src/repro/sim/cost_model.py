@@ -21,8 +21,18 @@ speed is roughly constant (Eq. 1's slope `k`).  An attended-but-resident
 token costs only the page-table plumbing and the extra attention context
 — roughly 5% of recomputing it (`gamma_cached`) — which is exactly the
 re-read overhead chunked prefill trades for not head-of-line-blocking the
-decode batch.  `beta_prefill` is the per-segment overhead of mixing a
-prompt chunk into an iteration (kernel launch / pipeline bubble).
+decode batch.
+
+Per-segment overhead depends on the execution model.  The legacy
+per-chunk engine path issues one jitted dispatch per prefill chunk plus a
+blocking argmax sync, so mixing K prompt chunks into an iteration costs
+K+1 dispatches: `beta_prefill` prices that per-segment launch + sync +
+pipeline bubble.  The fused single-dispatch path
+(`LLMEngine(fused_iteration=True)`, the default) executes the whole
+ragged batch in ONE dispatch — the per-iteration fixed overhead `t_base`
+is paid once and amortized across every segment, and only a small ragged
+mask / metadata cost `beta_seg_fused` remains per segment
+(``iteration_time(..., fused=True)``).
 """
 from __future__ import annotations
 
@@ -36,15 +46,21 @@ class CostModel:
     beta: float = 0.0012           # per decoding sequence (s)
     gamma: float = 0.00015         # per prefill token (s)
     gamma_cached: float = 0.0000075  # per attended resident token (s)
-    beta_prefill: float = 0.0004   # per prefill segment in a mixed batch (s)
+    beta_prefill: float = 0.0004   # per prefill segment, per-chunk path:
+    #                                extra dispatch + blocking argmax sync (s)
+    beta_seg_fused: float = 0.00008  # per segment, fused single-dispatch
+    #                                path: ragged mask / metadata only (s)
 
     def iteration_time(self, n_decode: int, prefill_tokens: int,
                        cached_tokens: int = 0,
-                       n_prefill_seqs: int = 0) -> float:
+                       n_prefill_seqs: int = 0,
+                       fused: bool = False) -> float:
+        seg = (self.beta_seg_fused if fused else self.beta_prefill) \
+            * n_prefill_seqs
         return (self.t_base + self.beta * n_decode
                 + self.gamma * prefill_tokens
                 + self.gamma_cached * cached_tokens
-                + self.beta_prefill * n_prefill_seqs)
+                + seg)
 
     def decode_tok_per_s(self, typical_batch: int = 8) -> float:
         """Per-request decode speed at a typical batch (Eq. 1 `k`)."""
@@ -54,6 +70,7 @@ class CostModel:
 LLAMA3_8B = CostModel("llama3-8b")
 # 13B-class: ~1.7x per-token cost, same structure (§7.5 scalability study)
 LLAMA2_13B = CostModel("llama2-13b", t_base=0.013, beta=0.0021, gamma=0.00026,
-                       gamma_cached=0.000013, beta_prefill=0.0007)
+                       gamma_cached=0.000013, beta_prefill=0.0007,
+                       beta_seg_fused=0.00014)
 
 COST_MODELS = {m.name: m for m in (LLAMA3_8B, LLAMA2_13B)}

@@ -61,9 +61,11 @@ class SimInstance:
                  kv_capacity_tokens: int, block_size: int = 16,
                  max_batch: int = 16, prefix_caching: bool = False,
                  policy: Optional[SchedulerPolicy] = None,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 fused_iteration: bool = True):
         self.instance_id = instance_id
         self.cost = cost
+        self.fused_iteration = fused_iteration
         self.bm = BlockManager(kv_capacity_tokens // block_size, block_size)
         self.cache = PrefixCache(block_size) if prefix_caching else None
         self.busy = False
@@ -128,7 +130,7 @@ class SimInstance:
             return [], None
         dt = self.cost.iteration_time(
             len(plan.decode), plan.prefill_tokens, plan.context_tokens,
-            n_prefill_seqs=len(plan.chunks))
+            n_prefill_seqs=len(plan.chunks), fused=self.fused_iteration)
         finished = []
         for r in plan.decode:
             r.output_len += 1
@@ -166,6 +168,10 @@ class SimConfig:
     # None = monolithic prefill: a prompt stalls the whole batch for one
     # iteration, exactly the §2.2 head-of-line pathology
     prefill_chunk_tokens: Optional[int] = None
+    # price each iteration as ONE fused ragged dispatch (the engine's
+    # default execution model) instead of one dispatch per prefill chunk
+    # plus a decode dispatch; False reproduces the per-chunk pricing
+    fused_iteration: bool = True
 
 
 @dataclasses.dataclass
@@ -244,7 +250,8 @@ class Simulation:
         self.instances = [
             SimInstance(i, cfg.cost, cfg.kv_capacity_tokens, max_batch=cfg.max_batch,
                         prefix_caching=cfg.prefix_caching, policy=inst_policy,
-                        prefill_chunk_tokens=cfg.prefill_chunk_tokens)
+                        prefill_chunk_tokens=cfg.prefill_chunk_tokens,
+                        fused_iteration=cfg.fused_iteration)
             for i in range(cfg.n_instances)]
         self.balancer = LoadBalancer(
             self.scheduler, self.dispatcher, self.orch, self._submit,

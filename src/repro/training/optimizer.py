@@ -6,7 +6,6 @@ the sharding rules (models/sharding.py) apply uniformly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -321,9 +321,10 @@ def test_chunked_prefill_interleaves_decode(model_and_params):
                     prompt_tokens=rng.integers(0, 500, 40).astype(np.int32),
                     max_new_tokens=2, arrival_time=0.1)
     eng.submit(short)
-    eng.step()                      # short admitted + prefilled + 1 decode
+    eng.step()                      # short admitted + prefilled (token pending)
     eng.submit(long_)
     eng.step()                      # long starts chunking; short decodes
+    eng.step()                      # chunking continues; short keeps decoding
     assert 0 < long_.prefilled_len < long_.prompt_len
     assert short.output_len >= 2, "decode must progress during chunked prefill"
     done = eng.run_until_drained()

@@ -4,9 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    BestFitOracleDispatcher,
     ConvergenceTracker,
-    DistributionProfiler,
     EmpiricalDistribution,
     FCFSScheduler,
     InstanceModel,

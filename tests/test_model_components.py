@@ -1,7 +1,6 @@
 """Focused unit tests on model internals: sliding-window masks, chunked
 attention equivalence, MoE dispatch invariants, RWKV/Mamba chunked-vs-step
 equivalence, optimizers, data pipeline, sharding rules."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -39,7 +39,7 @@ def test_forward_and_train_step(arch):
     g = jax.grad(lambda p: model.loss(p, batch)[0])(params)
     leaves = jax.tree.leaves(g)
     assert leaves
-    assert all(np.all(np.isfinite(np.asarray(l, dtype=np.float32))) for l in leaves), \
+    assert all(np.all(np.isfinite(np.asarray(leaf, dtype=np.float32))) for leaf in leaves), \
         f"{arch}: non-finite grads"
 
 

@@ -65,6 +65,7 @@ def test_paged_decode_matches_contiguous_decode(runner):
     r = _req(jax.random.PRNGKey(99), 10, 2)
     r.prompt_tokens = np.asarray(toks[0])
     eng.submit(r)
-    eng.step()  # prefill + first decode step
+    eng.step()  # fused prefill iteration: first token pending
+    eng.step()  # first decode iteration commits it
     # first generated token was argmax of prefill logits
     assert r.output_tokens[0] == int(jnp.argmax(logits_ref))

@@ -1,7 +1,6 @@
 """End-to-end behaviour tests for the discrete-event reproduction harness:
 the paper's headline orderings must hold (Kairos < Ayo < Parrot; priority
 ablation is the dominant factor; preemption drops under packing)."""
-import numpy as np
 import pytest
 
 from repro.sim import colocated_apps, make_app, run_policy
