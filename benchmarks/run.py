@@ -26,6 +26,7 @@ def main() -> None:
 
     from benchmarks import (
         chunked_prefill,
+        cluster_overlap,
         fig03_agent_profiles,
         fig07_queuing_example,
         fig08_rank_correlation,
@@ -45,7 +46,7 @@ def main() -> None:
                fig09_dispatch_preemption, fig14_single_app, fig15_colocated,
                fig16_sorting_accuracy, fig17_larger_llm, fig18_ablation,
                overhead, kernel_bench, prefix_reuse, chunked_prefill,
-               iteration_fusion]
+               iteration_fusion, cluster_overlap]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -17,17 +17,11 @@ import jax
 import numpy as np
 
 from repro.agents.messaging import Headers, MessageBus
-from repro.core import (
-    InstanceModel,
-    KairosScheduler,
-    LoadBalancer,
-    Orchestrator,
-    TimeSlotDispatcher,
-)
+from repro.core import KairosScheduler, Orchestrator
 from repro.core.orchestrator import HardwareProfile
 from repro.models import build_model
-from repro.serving import LLMEngine, PagedModelRunner
-from repro.serving.request import CompletionRecord, Request
+from repro.serving import LLMEngine, PagedModelRunner, ServingCluster
+from repro.serving.request import Request
 
 
 class BaseAgent:
@@ -81,10 +75,13 @@ class Workflow:
     def __init__(self, app_name: str = "app", n_instances: int = 1,
                  num_blocks: int = 128, block_size: int = 8, max_batch: int = 4,
                  prefix_caching: bool = False,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 pipelined: bool = True, llm_timeout_s: float = 300.0):
         self.app_name = app_name
         self.prefix_caching = prefix_caching
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.pipelined = pipelined
+        self.llm_timeout_s = llm_timeout_s
         self.bus = MessageBus()
         self.orch = Orchestrator(hardware=HardwareProfile(
             decode_tok_per_s=20.0, kv_capacity_tokens=num_blocks * block_size),
@@ -99,22 +96,32 @@ class Workflow:
         self._results: Dict[str, dict] = {}
         self._outstanding = 0
         self._lock = threading.Lock()
-        self.balancer: Optional[LoadBalancer] = None
+        self.cluster: Optional[ServingCluster] = None
+
+    @property
+    def balancer(self):
+        """Back-compat alias: the cluster owns the load balancer now."""
+        return self.cluster.balancer if self.cluster is not None else None
 
     # ------------------------------------------------------------------ setup
     def add_engine(self, name: str, model: str = "qwen3-1.7b", seed: int = 0):
         """Instantiate ``n_instances`` engines serving the REDUCED variant of
         the named architecture (CPU container; full configs go through the
-        dry-run)."""
+        dry-run), wired into a :class:`ServingCluster` — pipelined
+        breadth-first execution, OOM fencing feedback, and the instance
+        schedulers' ``can_admit`` as the dispatcher's admit probe."""
         from repro.configs import get_config
         cfg = get_config(model).reduced()
         self.vocab_size = cfg.vocab_size
         m = build_model(cfg)
         params = m.init_params(jax.random.PRNGKey(seed))
         n, blocks, bs, mb = self._engine_cfg
+        runner0 = PagedModelRunner(m, params, num_blocks=blocks,
+                                   block_size=bs, max_batch=mb)
         for i in range(n):
-            runner = PagedModelRunner(m, params, num_blocks=blocks,
-                                      block_size=bs, max_batch=mb)
+            # instances 1..n-1 clone the first runner: same params, fresh
+            # pool, shared compiled step functions (one compile, not n)
+            runner = runner0 if i == 0 else runner0.clone()
             # Kairos priorities carry into the serving iteration: engine
             # waiting queues are ordered by the same orchestrator-backed
             # policy the load balancer uses (batch_scheduler.py)
@@ -123,15 +130,10 @@ class Workflow:
                 enable_prefix_cache=self.prefix_caching,
                 policy=KairosScheduler(self.orch.priority_score),
                 prefill_chunk_tokens=self.prefill_chunk_tokens))
-        models = [InstanceModel(i, blocks * bs) for i in range(n)]
-        probe = lambda iid, req: (
-            len(self.engines[iid].running) + len(self.engines[iid].waiting)
-            < self.engines[iid].max_batch)
-        self.balancer = LoadBalancer(
-            KairosScheduler(self.orch.priority_score),
-            TimeSlotDispatcher(models, admit_probe=probe),
-            self.orch,
-            lambda iid, req: self.engines[iid].submit(req))
+        self.cluster = ServingCluster(
+            self.engines, self.orch,
+            scheduler=KairosScheduler(self.orch.priority_score),
+            pipelined=self.pipelined)
 
     def add_agent(self, agent_name: str, agent_class, use_model: str = "",
                   system_prompt: Optional[str] = None):
@@ -154,15 +156,37 @@ class Workflow:
         ev = threading.Event()
         box: list = []
         self._submissions.put((req, ev, box))
-        ev.wait(timeout=300)
-        return box[0] if box else []
+        if not ev.wait(timeout=self.llm_timeout_s):
+            # surface the deadlock instead of masking it as an empty
+            # generation: the exception propagates through the agent
+            # thread, which marks this workflow failed in the results
+            raise TimeoutError(
+                f"LLM call by agent {agent_name!r} (msg {metadata.msg_id}) "
+                f"timed out after {self.llm_timeout_s:.0f}s")
+        return box[0]
 
     # ------------------------------------------------------------------ agents
     def _on_message(self, msg):
         agent = self.agents[msg.topic]
 
         def work():
-            out, nxt = agent._run_impl(msg.payload, msg.headers)
+            try:
+                out, nxt = agent._run_impl(msg.payload, msg.headers)
+            except Exception as e:
+                # a failed stage (e.g. an LLM-call TimeoutError) ends its
+                # workflow with an error result instead of hanging run()
+                # on an _outstanding count that never reaches zero
+                with self._lock:
+                    self._results[msg.headers.msg_id] = {
+                        "failed": True, "agent": agent.name,
+                        "error": f"{type(e).__name__}: {e}"}
+                    self._outstanding -= 1
+                # finalize the partial trace like the success path does:
+                # earlier stages' completion records must not park in the
+                # analyzer forever (and their latency samples still feed
+                # the priority distributions)
+                self.orch.on_workflow_complete(msg.headers.msg_id)
+                return
             if nxt is not None:
                 self.bus.publish(nxt, out, Headers(
                     msg_id=msg.headers.msg_id, app_name=msg.headers.app_name,
@@ -197,8 +221,13 @@ class Workflow:
         return msg_id
 
     def run(self, timeout: float = 300.0) -> Dict[str, dict]:
-        """Driver loop: drain bus -> agent threads -> balancer -> engines."""
-        assert self.balancer is not None, "call add_engine first"
+        """Driver loop: drain bus -> agent threads -> cluster step.
+
+        The cluster step runs the balancer tick, the breadth-first
+        pipelined engine iterations, and the control-plane feedback
+        (completion records, dispatcher slot release, OOM fencing); this
+        loop only bridges agent threads to it."""
+        assert self.cluster is not None, "call add_engine first"
         t_end = time.monotonic() + timeout
         while time.monotonic() < t_end:
             with self._lock:
@@ -211,23 +240,11 @@ class Workflow:
             while not self._submissions.empty():
                 req, ev, box = self._submissions.get()
                 self._pending[req.req_id] = (req, ev, box)
-                self.balancer.enqueue(req)
-            self.balancer.tick(time.monotonic())
-            idle = True
-            for eng in self.engines:
-                finished = eng.step()
-                idle = idle and not eng.running and not eng.waiting
-                for r in finished:
-                    self.orch.on_completion(CompletionRecord(
-                        agent_name=r.agent_name, msg_id=r.msg_id,
-                        upstream_name=r.upstream_name, app_name=r.app_name,
-                        start_time=r.arrival_time, end_time=r.finish_time,
-                        prompt_len=r.prompt_len, output_len=r.output_len,
-                        exec_start_time=r.exec_start_time))
-                    self.balancer.dispatcher.on_finish(r.instance_id, r.req_id)
-                    _, ev, box = self._pending.pop(r.req_id)
-                    box.append(list(r.output_tokens))
-                    ev.set()
-            if idle:
+                self.cluster.submit(req)
+            for r in self.cluster.step():
+                _, ev, box = self._pending.pop(r.req_id)
+                box.append(list(r.output_tokens))
+                ev.set()
+            if not self.cluster.has_work:
                 time.sleep(0.002)
         return dict(self._results)

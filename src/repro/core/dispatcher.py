@@ -86,6 +86,12 @@ class TimeSlotDispatcher:
         self.instances[instance_id].fenced_until = now + self.oom_cooldown
         self._cache_now = float("nan")
 
+    def is_fenced(self, instance_id: int, now: float) -> bool:
+        """True while the instance sits in its post-OOM cooldown — the
+        cluster runtime and tests introspect fencing through this instead
+        of poking at ``InstanceModel.fenced_until``."""
+        return now < self.instances[instance_id].fenced_until
+
     # ---------------------------------------------------------------- internals
     def _refresh_cache(self, now: float, min_end: float):
         horizon_end = min_end

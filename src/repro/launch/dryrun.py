@@ -245,6 +245,17 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
                     "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
                     "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
                 }
+                # XLA CPU (and some wheel versions) report peak as None
+                # even when the per-category sizes are present; synthesize
+                # a conservative upper bound so downstream consumers (the
+                # roofline, the dry-run regression test) keep a usable
+                # number — flagged so nobody mistakes it for a measurement
+                parts = [rec["memory"][k] for k in
+                         ("argument_bytes", "output_bytes", "temp_bytes")]
+                if rec["memory"]["peak_bytes"] is None and \
+                        any(p is not None for p in parts):
+                    rec["memory"]["peak_bytes"] = sum(p or 0 for p in parts)
+                    rec["memory"]["peak_bytes_estimated"] = True
             except Exception as e:  # CPU backend may not support it
                 rec["memory"] = {"error": str(e)}
             try:

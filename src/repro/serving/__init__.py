@@ -10,7 +10,13 @@ from repro.serving.batch_scheduler import (
     flatten_plan,
     pad_bucket,
 )
-from repro.serving.engine import LLMEngine, PagedModelRunner
+from repro.serving.engine import (
+    LLMEngine,
+    PagedModelRunner,
+    TokenBuffer,
+    TokenRef,
+)
+from repro.serving.cluster import ServingCluster
 from repro.serving.kv_cache import BlockManager, NoFreeBlocks
 from repro.serving.prefix_cache import PrefixCache, PrefixCacheStats
 from repro.serving.request import (
@@ -23,7 +29,8 @@ from repro.serving.request import (
 __all__ = ["BatchScheduler", "IterationBatch", "IterationPlan",
            "KeyPrefixMatcher", "PrefillChunk", "SchedStats", "Segment",
            "TokenPrefixMatcher", "flatten_plan", "pad_bucket",
-           "LLMEngine", "PagedModelRunner", "BlockManager", "NoFreeBlocks",
+           "LLMEngine", "PagedModelRunner", "ServingCluster",
+           "TokenBuffer", "TokenRef", "BlockManager", "NoFreeBlocks",
            "PrefixCache", "PrefixCacheStats",
            "CompletionRecord", "Request", "RequestState",
            "reset_request_ids"]

@@ -221,7 +221,9 @@ def flatten_plan(plan: IterationPlan, bm: BlockManager,
     :class:`IterationBatch`.
 
     ``next_token`` maps req_id -> pending decode token (the backend's
-    sampled-but-not-yet-fed token).  A request whose *final* prefill
+    sampled-but-not-yet-fed token; any ``int()``-convertible value,
+    including the engine's deferred ``TokenRef``).  A request whose
+    *final* prefill
     chunk is in this very plan has no pending token yet — its first
     decode token is the argmax of that chunk's logits, computed by this
     same dispatch — so its decode entry is deferred to the next
@@ -268,7 +270,12 @@ def flatten_plan(plan: IterationPlan, bm: BlockManager,
     tables_d = np.zeros((td, nbd), np.int32)
     for i, r in enumerate(decode):
         table = bm.block_table(r.req_id)
-        tokens_d[i] = next_token[r.req_id]
+        # int() materializes deferred tokens (engine.TokenRef): feeding a
+        # previous iteration's on-device argmax into this batch is the
+        # one host sync of the pipelined execution model — by now the
+        # producing dispatch has typically drained, so it's a copy, not
+        # a stall
+        tokens_d[i] = int(next_token[r.req_id])
         positions_d[i] = r.total_len
         tables_d[i, :len(table)] = table
         write_slots[sp * lp + i] = table[r.total_len // bs] * bs \

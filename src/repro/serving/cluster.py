@@ -1,0 +1,216 @@
+"""Pipelined multi-instance cluster runtime.
+
+The paper's end-to-end system (§3, §6) is a *cluster*: a memory-aware
+dispatcher spreads requests over many LLM instances and corrects itself
+from live feedback (early finishes release future slots, a real
+OOM/preemption fences the instance).  :class:`ServingCluster` is that
+system on the real-engine path — it owns N :class:`LLMEngine`\\ s plus the
+control plane (:class:`LoadBalancer` / :class:`TimeSlotDispatcher` /
+:class:`Orchestrator`) and closes the loops the hand-rolled driver in
+``agents/base.py`` used to leave open:
+
+* **Pipelined execution** — each cluster step is breadth-first: every
+  engine's fused iteration is *dispatched* first
+  (:meth:`LLMEngine.dispatch_iteration`), results are *collected*
+  after.  Dispatches are issued from a small worker pool, one engine
+  per worker: host-side planning/flattening of engine *i+1* overlaps
+  device compute of engine *i*, and — because XLA CPU runs a cheap
+  computation on (or near) the calling thread with the GIL released —
+  the engines' device computations themselves run concurrently, which
+  a single-threaded jax-async-dispatch queue does not deliver for
+  iteration-sized computations (measured: queue-depth pipelining is
+  ~10% *slower* than block-each at smoke scale, while worker-thread
+  dispatch is ~1.4x faster).  Each worker absorbs its own engine's
+  device wait; next-token ids reach the control-plane thread as
+  already-host-resident buffers, so ``collect`` never blocks (deferred
+  host sync, see ``engine.TokenBuffer``).  ``pipelined=False`` keeps
+  the legacy serial loop — step one engine at a time, blocking on its
+  device->host transfer — as the differential baseline
+  (``benchmarks/cluster_overlap.py`` measures the gap).
+
+* **OOM feedback** (§6 adaptive) — after every collect the cluster polls
+  ``engine.poll_oom()`` and fences the instance via
+  ``dispatcher.on_oom``, exactly like the simulator's control plane.
+
+* **Admission probe parity** — the dispatcher's ``admit_probe`` is
+  :meth:`BatchScheduler.can_admit` (batch slot + watermarked prompt
+  memory), not an ad-hoc queue-length check, so the dispatcher stops
+  placing prompts that would immediately trigger preemption.
+
+* **Completion feedback** — finished requests flow to
+  ``orchestrator.on_completion`` (workflow analyzer + profiler) and
+  ``dispatcher.on_finish`` (release future slots) in one place.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, List, Optional, Sequence
+
+from repro.serving.engine import LLMEngine
+from repro.serving.request import CompletionRecord, Request
+
+
+class ServingCluster:
+    """N real engines + the Kairos control plane, stepped as one unit.
+
+    Parameters
+    ----------
+    engines:
+        The :class:`LLMEngine` instances (unique ``instance_id`` each).
+    orchestrator:
+        The :class:`~repro.core.orchestrator.Orchestrator` feeding
+        priorities and memory ramps.
+    scheduler:
+        Load-balancer queue policy; defaults to the orchestrator-backed
+        ``KairosScheduler``.
+    dispatcher:
+        Instance placement; defaults to a
+        :class:`~repro.core.dispatcher.TimeSlotDispatcher` over the
+        engines' KV capacities.  An injected dispatcher without an
+        ``admit_probe`` is wired to the engines' ``can_admit``.
+    pipelined:
+        Breadth-first dispatch-all-then-collect-all with one worker per
+        engine (default).  False = legacy serial loop (dispatch +
+        blocking collect per engine, no workers).
+    oom_feedback:
+        Poll ``engine.poll_oom()`` and fence via ``dispatcher.on_oom``
+        (default).  False reproduces the legacy driver loop, where the
+        fencing hook was dead code on the real path — kept only as the
+        differential baseline for benchmarks/tests.
+    clock:
+        Injectable time source (tests use a deterministic one).
+    """
+
+    def __init__(self, engines: Sequence[LLMEngine], orchestrator, *,
+                 scheduler=None, dispatcher=None, pipelined: bool = True,
+                 oom_feedback: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
+        from repro.core.balancer import LoadBalancer
+        from repro.core.dispatcher import InstanceModel, TimeSlotDispatcher
+        from repro.core.scheduler import KairosScheduler
+
+        self.engines: List[LLMEngine] = list(engines)
+        assert self.engines, "a cluster needs at least one engine"
+        self._by_id = {e.instance_id: e for e in self.engines}
+        assert len(self._by_id) == len(self.engines), \
+            "engine instance_ids must be unique"
+        self.orch = orchestrator
+        self.pipelined = pipelined
+        self.oom_feedback = oom_feedback
+        self.clock = clock
+        self._pool: Optional[ThreadPoolExecutor] = None
+        if dispatcher is None:
+            dispatcher = TimeSlotDispatcher(
+                [InstanceModel(e.instance_id, e.kv_capacity_tokens)
+                 for e in self.engines],
+                admit_probe=self.can_admit)
+        elif getattr(dispatcher, "admit_probe", None) is None:
+            dispatcher.admit_probe = self.can_admit
+        self.dispatcher = dispatcher
+        self.balancer = LoadBalancer(
+            scheduler or KairosScheduler(self.orch.priority_score),
+            self.dispatcher, self.orch,
+            lambda iid, req: self._by_id[iid].submit(req))
+
+    # ------------------------------------------------------------------ intake
+    def submit(self, req: Request):
+        """Enqueue at the load balancer; the next step dispatches it."""
+        self.balancer.enqueue(req)
+
+    def can_admit(self, instance_id: int, req: Request) -> bool:
+        """Dispatcher admit probe: the instance scheduler's own admission
+        predicate (batch slot + watermarked prompt memory), matching the
+        simulator's dispatch semantics."""
+        return self._by_id[instance_id].sched.can_admit(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.balancer.queue) or any(
+            e.sched.has_work or e.has_pending for e in self.engines)
+
+    # ---------------------------------------------------------------- stepping
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        """One cluster iteration: balance, then run every engine once.
+
+        Pipelined mode issues ALL engine dispatches before the first
+        collect, one worker thread per engine: while engine *i*'s fused
+        iteration computes, the other workers plan/flatten/dispatch (and
+        compute) theirs, and each worker absorbs its own device wait.
+        Collect then runs on this thread in engine order — engine 0's
+        bookkeeping overlaps engines 1..N-1 still computing — and never
+        blocks (tokens arrive host-resident).  Serial mode steps engines
+        one at a time with a forced host sync, reproducing the legacy
+        driver loop exactly."""
+        now = self.clock() if now is None else now
+        self.balancer.tick(now)
+        finished: List[Request] = []
+        if self.pipelined and len(self.engines) > 1:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=len(self.engines),
+                    thread_name_prefix="cluster-dispatch")
+            futures = [self._pool.submit(self._dispatch_one, e)
+                       for e in self.engines]
+            for e, f in zip(self.engines, futures):
+                f.result()
+                finished.extend(self._collect(e, now))
+        elif self.pipelined:
+            # single engine: nothing to overlap across instances — skip
+            # the worker handoff, keep only the deferred host sync
+            e = self.engines[0]
+            e.dispatch_iteration()
+            finished.extend(self._collect(e, now))
+        else:
+            for e in self.engines:
+                e.dispatch_iteration()
+                finished.extend(self._collect(e, now, force_sync=True))
+        return finished
+
+    @staticmethod
+    def _dispatch_one(e: LLMEngine):
+        """Worker body: issue the engine's iteration and absorb its
+        device wait here, off the control-plane thread.  Engine state is
+        instance-local, so workers never contend."""
+        e.dispatch_iteration()
+        e.sync()
+
+    def _collect(self, e: LLMEngine, now: float,
+                 force_sync: bool = False) -> List[Request]:
+        """Collect one engine and close the control-plane feedback loops."""
+        done = e.collect(force_sync=force_sync)
+        if e.poll_oom() and self.oom_feedback:
+            # §6 adaptive: a real OOM/preemption fences the instance for a
+            # cooldown so the dispatcher stops stacking load on it
+            self.dispatcher.on_oom(e.instance_id, now)
+        for r in done:
+            self.orch.on_completion(CompletionRecord(
+                agent_name=r.agent_name, msg_id=r.msg_id,
+                upstream_name=r.upstream_name, app_name=r.app_name,
+                start_time=r.arrival_time, end_time=r.finish_time,
+                prompt_len=r.prompt_len, output_len=r.output_len,
+                exec_start_time=r.exec_start_time))
+            self.dispatcher.on_finish(r.instance_id, r.req_id)
+        return done
+
+    # ------------------------------------------------------------------ drains
+    def run_until_drained(self, max_steps: int = 100_000,
+                          idle_sleep: float = 0.0) -> List[Request]:
+        """Step until queue + engines are empty; returns all finishers."""
+        out: List[Request] = []
+        for _ in range(max_steps):
+            done = self.step()
+            out.extend(done)
+            if not self.has_work:
+                break
+            if not done and idle_sleep:
+                time.sleep(idle_sleep)
+        return out
+
+    def close(self):
+        """Shut down the dispatch worker pool (idempotent).  Long-lived
+        owners (a Workflow) keep the cluster open for its lifetime;
+        benchmarks building many clusters call this between runs."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None

@@ -12,7 +12,7 @@ KV memory in use / capacity, running/waiting counts, preemption counter.
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -190,13 +190,16 @@ class PagedModelRunner:
         return jax.jit(step, static_argnames=("n_cached",))
 
     # -- fused ragged iteration: one dispatch per engine step -----------------
-    def run_iteration(self, batch: IterationBatch) -> np.ndarray:
+    def run_iteration(self, batch: IterationBatch) -> jnp.ndarray:
         """Execute a whole :class:`IterationBatch` — every prefill chunk,
         every decode token, and the plan's copy-on-write block copies — as
         ONE jitted device dispatch, returning next-token argmax ids (S,)
-        for every segment row in a single device->host transfer.  The
-        per-chunk path pays K+1 dispatches and K blocking argmax syncs
-        for the same work."""
+        for every segment row.  The result is a *device* array: jax async
+        dispatch means this call returns before the compute finishes, so
+        a cluster loop can issue the next engine's iteration while this
+        one runs; the caller syncs (one transfer) only when it actually
+        consumes the token values.  The per-chunk path pays K+1 dispatches
+        and K blocking argmax syncs for the same work."""
         self.n_dispatches += 1
         # numpy arrays go straight to the jitted call: the C++ dispatch
         # path converts them far cheaper than 12 python-level jnp.asarray
@@ -206,7 +209,7 @@ class PagedModelRunner:
             batch.tables_p, batch.tokens_d, batch.positions_d,
             batch.tables_d, batch.write_slots, batch.sample_rows,
             batch.cow_src, batch.cow_dst)
-        return np.asarray(nxt)
+        return nxt
 
     def _build_fused(self):
         cfg = self.cfg
@@ -316,6 +319,87 @@ class PagedModelRunner:
             jnp.asarray(block_tables, jnp.int32), jnp.asarray(live, bool))
         return logits
 
+    def clone(self) -> "PagedModelRunner":
+        """A new runner over the same model/params with a fresh zeroed KV
+        pool, *sharing* this runner's compiled step functions (the jitted
+        callables close over config/backend only; params and pool are
+        traced arguments).  A multi-instance cluster built from clones
+        pays for one compile per shape bucket, not one per instance."""
+        c = object.__new__(PagedModelRunner)
+        c.model, c.cfg, c.params = self.model, self.cfg, self.params
+        c.block_size, c.num_blocks = self.block_size, self.num_blocks
+        c.max_batch, c.backend = self.max_batch, self.backend
+        c.pool = jnp.zeros_like(self.pool)
+        c.n_dispatches = 0
+        c._decode_fn = self._decode_fn
+        c._prefill_fn = self._prefill_fn
+        c._suffix_fn = self._suffix_fn
+        c._fused_fn = self._fused_fn
+        return c
+
+
+# =============================================================================
+# Deferred host sync: lazy next-token references
+# =============================================================================
+
+
+class TokenBuffer:
+    """The next-token ids of one fused dispatch, synced to host lazily.
+
+    ``run_iteration`` returns a device array whose compute may still be
+    in flight (jax async dispatch).  The buffer converts it to numpy
+    exactly once, on first access — so the device->host round-trip (and
+    the wait for the producing dispatch) happens only when a token value
+    is actually consumed: fed into a later iteration's flatten, checked
+    against ``eos_token``, or materialized at request finish."""
+
+    __slots__ = ("_dev", "_host")
+
+    def __init__(self, dev):
+        self._dev = dev
+        self._host: Optional[np.ndarray] = None
+
+    def host(self) -> np.ndarray:
+        if self._host is None:
+            dev = self._dev               # local ref: a concurrent host()
+            if dev is not None:           # call can never hand us None
+                self._host = np.asarray(dev)
+                self._dev = None          # release the device buffer early
+        return self._host
+
+
+class TokenRef:
+    """One row of a :class:`TokenBuffer`: a not-yet-synced token id.
+
+    Converts to ``int`` on demand (``__int__``/``__index__``), so host
+    code that stores pending tokens — the engine's next-token map, a
+    request's ``output_tokens`` while it is still running — never blocks
+    on the device until the value is observed.  Comparison syncs too:
+    equality against a plain int is value equality."""
+
+    __slots__ = ("buf", "row")
+
+    def __init__(self, buf: TokenBuffer, row: int):
+        self.buf = buf
+        self.row = row
+
+    def __int__(self) -> int:
+        return int(self.buf.host()[self.row])
+
+    __index__ = __int__
+
+    def __eq__(self, other) -> bool:
+        try:
+            return int(self) == int(other)
+        except (TypeError, ValueError):
+            return NotImplemented
+
+    def __hash__(self) -> int:
+        return hash(int(self))
+
+    def __repr__(self) -> str:
+        return f"TokenRef({int(self)})"
+
 
 # =============================================================================
 # Continuous-batching engine
@@ -357,6 +441,8 @@ class LLMEngine:
                  fused_iteration: bool = True):
         self.runner = runner
         self.fused_iteration = fused_iteration
+        self._pending: Optional[Tuple[IterationBatch, TokenBuffer]] = None
+        self._pending_finished: Optional[List[Request]] = None
         self.bm = BlockManager(runner.num_blocks, runner.block_size)
         self.prefix_cache = (PrefixCache(runner.block_size)
                              if enable_prefix_cache else None)
@@ -412,32 +498,80 @@ class LLMEngine:
 
     # ---------------------------------------------------------------- stepping
     def step(self) -> List[Request]:
-        """One continuous-batching iteration; returns finished requests."""
+        """One continuous-batching iteration; returns finished requests.
+
+        The legacy serial entry point: dispatch + collect back-to-back,
+        with the host sync forced — the engine blocks on the device
+        result before returning, exactly the pre-pipelining behaviour.
+        Cluster loops call :meth:`dispatch_iteration` / :meth:`collect`
+        instead to overlap engines."""
+        self.dispatch_iteration()
+        return self.collect(force_sync=True)
+
+    @property
+    def has_pending(self) -> bool:
+        """A dispatched-but-not-collected iteration is in flight."""
+        return self._pending is not None or self._pending_finished is not None
+
+    def dispatch_iteration(self) -> bool:
+        """Compose this engine's next iteration and issue its device
+        dispatch WITHOUT waiting for the result (jax async dispatch): the
+        returned next-token ids stay on device until :meth:`collect` —
+        or a later consumer — actually needs them.  Returns True iff an
+        iteration was issued.  On the legacy per-chunk path there is no
+        single dispatch to defer; the iteration executes synchronously
+        here and ``collect`` just hands back its finishers."""
+        assert not self.has_pending, "collect() the previous iteration first"
         plan = self.sched.plan(self.clock())
         if plan is None:
-            return []
-        if self.fused_iteration:
-            return self._execute_fused(plan)
-        return self._execute_per_chunk(plan)
-
-    def _execute_fused(self, plan) -> List[Request]:
-        """One ragged dispatch for the whole plan; one argmax transfer."""
+            return False
+        if not self.fused_iteration:
+            self._pending_finished = self._execute_per_chunk(plan)
+            return True
         batch = flatten_plan(plan, self.bm, self._next_tok)
-        nxt = self.runner.run_iteration(batch)             # (S,) host ints
+        self._pending = (batch, TokenBuffer(self.runner.run_iteration(batch)))
+        return True
+
+    def sync(self):
+        """Block until the in-flight iteration's next-token ids are
+        host-resident (no-op when nothing is pending).  Cluster worker
+        threads call this right after :meth:`dispatch_iteration` so the
+        device wait lands on the worker — concurrently with the other
+        engines' compute — and never on the control-plane thread."""
+        if self._pending is not None:
+            self._pending[1].host()
+
+    def collect(self, force_sync: bool = False) -> List[Request]:
+        """Book the dispatched iteration's results; returns finished
+        requests.  All bookkeeping is host-side metadata: new tokens are
+        recorded as :class:`TokenRef`s, so nothing blocks on the device
+        unless a request finished (its output materializes), EOS checking
+        demands token values, or ``force_sync`` asks for the legacy
+        blocking behaviour."""
+        if self._pending_finished is not None:
+            finished, self._pending_finished = self._pending_finished, None
+            return finished
+        if self._pending is None:
+            return []
+        (batch, toks), self._pending = self._pending, None
+        if force_sync or self.eos_token >= 0:
+            toks.host()
         finished = []
         for j, seg in enumerate(batch.segments):
             r = seg.req
             if seg.kind == "prefill":
                 if seg.emits_token:
-                    self._next_tok[r.req_id] = int(nxt[j])
+                    self._next_tok[r.req_id] = TokenRef(toks, j)
                 continue
             fed = self._next_tok[r.req_id]
             r.output_tokens.append(fed)
             r.output_len += 1
-            self._next_tok[r.req_id] = int(nxt[j])
+            self._next_tok[r.req_id] = TokenRef(toks, j)
             done = (r.output_len >= r.max_new_tokens
-                    or (self.eos_token >= 0 and int(nxt[j]) == self.eos_token))
+                    or (self.eos_token >= 0
+                        and int(toks.host()[j]) == self.eos_token))
             if done:
+                r.output_tokens[:] = [int(t) for t in r.output_tokens]
                 self.sched.finish(r, self.clock())
                 self._next_tok.pop(r.req_id, None)
                 finished.append(r)
