@@ -40,7 +40,12 @@ import sys
 GATES = {
     "iteration_fusion": {
         "wall": ("wall_per_token_fused_ms",),
-        "exact": ("dispatches_per_iteration_fused",),
+        # pool_bytes_copied_per_iter_fused: the donated in-place pool
+        # must never regress to copying (baseline pins it at 0, and
+        # "must not grow" from 0 means stays 0)
+        "exact": ("dispatches_per_iteration_fused",
+                  "pool_bytes_copied_per_iter_fused",
+                  "peak_live_pool_buffers_fused"),
         "host_exact": ("recompiles_fused",),
         "ratio_floors": {"speedup": 0.9},
     },

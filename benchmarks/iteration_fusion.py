@@ -13,7 +13,14 @@ Measured per engine configuration:
   bucketed static shapes; the legacy path specializes per chunk/context
   shape pair and per decode-table width),
 * **wall-clock per generated token**, compile-warm (a full warmup pass
-  precedes the timed pass).
+  precedes the timed pass),
+* **pool bytes copied per iteration** and **peak live pool buffers** —
+  witnessed by the KV pool's device buffer address: the donated
+  in-place path must copy 0 bytes (one resident pool buffer), while a
+  ``donate_pool=False`` differential drive shows the whole-pool copy
+  every dispatch used to pay.  A ``ragged_backend="flat_ref"``
+  differential drive pins token identity of the native segment-bounded
+  ragged attention vs the legacy flatten-and-repeat lowering.
 
 A tiny fig14-style sim (QA app, kairos policy, fused pricing) rides
 along so the CI perf trajectory also tracks an end-to-end metric.
@@ -57,13 +64,33 @@ def _workload(cfg: Dict) -> List:
 
 
 def _drive(runner, cfg: Dict, fused: bool) -> Dict:
-    """One full drain of the workload; returns raw counters."""
+    """One full drain of the workload; returns raw counters.
+
+    ``pool_addr_changes`` counts iterations after which the KV pool's
+    device buffer address moved — with donation every dispatch updates
+    the pool in place (0 changes, 1 live pool buffer); without it each
+    dispatch materializes a second full-size pool buffer, witnessed as
+    one address change of ``runner.pool.nbytes`` bytes.  Per-step
+    sampling is *exact* for every configuration this benchmark emits:
+    the donated drives copy nothing (any copy would move the address at
+    least once per drain), and the non-donated drive runs fused — one
+    pool-threading dispatch per step, whose output buffer is allocated
+    while the input is still live, so its address always differs.  (A
+    multi-pool-dispatch non-donated step — the legacy path with
+    donation off — could alias back across an even number of copies and
+    undercount; no emitted metric measures that configuration.)
+    ``step()`` force-syncs, so reading the address here never blocks an
+    in-flight dispatch.  On a runtime without an address probe
+    (``pool_address() is None``) the count is None — the metrics are
+    then *omitted*, never fabricated as a gate-passing 0."""
     from repro.serving import LLMEngine, reset_request_ids
     reset_request_ids()
     eng = LLMEngine(runner, max_batch=cfg["max_batch"],
                     prefill_chunk_tokens=CHUNK, fused_iteration=fused)
     pending = _workload(cfg)
     d0 = runner.n_dispatches
+    prev_addr = runner.pool_address()
+    addr_changes = 0 if prev_addr is not None else None
     t0 = time.perf_counter()
     done, iters = [], 0
     for _ in range(100_000):
@@ -74,13 +101,37 @@ def _drive(runner, cfg: Dict, fused: bool) -> Dict:
         done.extend(eng.step())
         if runner.n_dispatches > before:
             iters += 1                    # an iteration actually executed
+            if addr_changes is not None:
+                addr = runner.pool_address()
+                if addr != prev_addr:
+                    addr_changes += 1
+                prev_addr = addr
         elif not pending:
             break                         # idle and nothing left to arrive
     wall = time.perf_counter() - t0
     tokens = sum(r.output_len for r in done)
     return {"wall_s": wall, "tokens": tokens, "iters": max(iters, 1),
             "dispatches": runner.n_dispatches - d0,
+            "pool_addr_changes": addr_changes,
+            "pool_nbytes": runner.pool.nbytes,
             "outputs": sorted((r.msg_id, tuple(r.output_tokens)) for r in done)}
+
+
+def _pool_copy_metrics(r: Dict, key: str) -> Dict:
+    """Pool-traffic metrics witnessed by device buffer address changes
+    (see ``_drive``): bytes copied per iteration (0 when donation holds)
+    and peak simultaneously-live pool buffers (1 in place vs 2 copying).
+    Empty when the runtime exposed no address probe — a missing metric
+    surfaces in check_regression as a note (a failure under --strict)
+    instead of a fabricated gate-passing zero."""
+    if r["pool_addr_changes"] is None:
+        return {}
+    return {
+        f"pool_bytes_copied_per_iter_{key}":
+            r["pool_addr_changes"] * r["pool_nbytes"] / r["iters"],
+        f"peak_live_pool_buffers_{key}":
+            1.0 + (1.0 if r["pool_addr_changes"] else 0.0),
+    }
 
 
 def measure(smoke: bool = True) -> Dict:
@@ -124,6 +175,7 @@ def measure(smoke: bool = True) -> Dict:
         res[key] = r
         out[f"wall_per_token_{key}_ms"] = 1e3 * r["wall_s"] / r["tokens"]
         out[f"dispatches_per_iteration_{key}"] = r["dispatches"] / r["iters"]
+        out.update(_pool_copy_metrics(r, key))
     out["recompiles_fused"] = recompiles_fused
     out["recompiles_legacy"] = recompiles_legacy
     assert res["fused"]["outputs"] == res["legacy"]["outputs"], \
@@ -131,6 +183,24 @@ def measure(smoke: bool = True) -> Dict:
     assert res["fused"]["tokens"] == res["legacy"]["tokens"] > 0
     out["speedup"] = (out["wall_per_token_legacy_ms"]
                       / out["wall_per_token_fused_ms"])
+
+    # differential configurations (one untimed drain each): the donated
+    # in-place pool and the native segment-bounded ragged attention must
+    # change buffer traffic only, never the token streams
+    nd_runner = PagedModelRunner(model, params, num_blocks=cfg["num_blocks"],
+                                 block_size=cfg["block_size"],
+                                 max_batch=cfg["max_batch"], donate_pool=False)
+    nd = _drive(nd_runner, cfg, True)
+    assert nd["outputs"] == res["fused"]["outputs"], \
+        "disabling pool donation must not change generated tokens"
+    out.update(_pool_copy_metrics(nd, "nondonated"))
+    flat_runner = PagedModelRunner(model, params, num_blocks=cfg["num_blocks"],
+                                   block_size=cfg["block_size"],
+                                   max_batch=cfg["max_batch"],
+                                   ragged_backend="flat_ref")
+    flat = _drive(flat_runner, cfg, True)
+    assert flat["outputs"] == res["fused"]["outputs"], \
+        "flatten-and-repeat ragged lowering must be token-identical"
     return out
 
 

@@ -14,6 +14,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.paged_attention import paged_attention as _paged_pallas
+from repro.kernels.ragged_attention import (
+    ragged_segment_attention as _ragged_pallas,
+)
 
 
 def default_backend() -> str:
@@ -27,6 +30,8 @@ def paged_attention(q, k_pool, v_pool, block_tables, context_lens, backend: str 
         return _paged_pallas(q, k_pool, v_pool, block_tables, context_lens)
     if backend == "interpret":
         return _paged_pallas(q, k_pool, v_pool, block_tables, context_lens, interpret=True)
+    if backend != "ref":
+        raise ValueError(f"unknown paged attention backend {backend!r}")
     return _ref.paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens)
 
 
@@ -38,20 +43,44 @@ def ragged_segment_attention(q, k_pool, v_pool, block_tables, positions,
     — every chunk's tokens tiled to (S, L).  See ``kernels/ref.py`` for
     shapes and mask semantics.
 
-    The ragged mask lowers exactly onto the paged *decode* kernel:
-    flattening the (S, L) tile to S*L query rows, repeating each
-    segment's block table per row, and setting each row's context length
-    to ``position + 1`` turns the segment-blocked causal mask into the
-    kernel's ordinary context-length mask — so the same Pallas kernel
-    serves single-token decode and fused mixed iterations, with no
-    second kernel to maintain.
+    Backends
+    --------
+    ``"pallas"`` / ``"interpret"``
+        The native segment-tiled kernel (``kernels/ragged_attention.py``):
+        grid (segment, kv_head, kv_page), scalar-prefetched per-segment
+        block tables, (L, hd) query tiles with online-softmax scratch,
+        and per-segment page bounds so a segment only visits pages up to
+        ``max(positions) // bs``.
+    ``"flat"`` / ``"flat_interpret"`` / ``"flat_ref"``
+        The PR 3 flatten-and-repeat lowering onto the single-query paged
+        *decode* path — S·L query rows, block tables repeated per row,
+        each row's context length set to ``position + 1`` — kept as the
+        differential-testing reference for the native kernel (the suffix
+        picks which decode backend executes it).
+    ``"ref"``
+        Pure-jnp oracle with the same segment-bounded page gather as the
+        native kernel.
     """
+    if q.size == 0:        # absent prefill part (decode-only iteration):
+        return q           # every backend must no-op, not trace 0 rows
     if backend in ("pallas", "interpret"):
+        return _ragged_pallas(q, k_pool, v_pool, block_tables, positions,
+                              interpret=backend == "interpret")
+    if backend in ("flat", "flat_interpret", "flat_ref"):
         s, lq, kv, g, hd = q.shape
-        out = _paged_pallas(q.reshape(s * lq, kv, g, hd), k_pool, v_pool,
-                            jnp.repeat(block_tables, lq, axis=0),
-                            positions.reshape(-1) + 1,
-                            interpret=backend == "interpret")
+        flat_q = q.reshape(s * lq, kv, g, hd)
+        flat_bt = jnp.repeat(block_tables, lq, axis=0)
+        flat_cl = positions.reshape(-1) + 1
+        if backend == "flat_ref":
+            out = _ref.paged_attention_ref(flat_q, k_pool, v_pool,
+                                           flat_bt, flat_cl)
+        else:
+            out = _paged_pallas(flat_q, k_pool, v_pool, flat_bt, flat_cl,
+                                interpret=backend == "flat_interpret")
         return out.reshape(s, lq, kv, g, hd)
+    if backend != "ref":
+        # a typo'd backend must not silently compile the dense jnp oracle
+        # into a device hot loop (token-identical, so nothing else catches it)
+        raise ValueError(f"unknown ragged attention backend {backend!r}")
     return _ref.ragged_segment_attention_ref(
         q, k_pool, v_pool, block_tables, positions)

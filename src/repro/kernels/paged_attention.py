@@ -44,24 +44,31 @@ def _paged_attn_kernel(block_tables_ref,   # (B, nb) SMEM (scalar prefetch)
         l_ref[...] = jnp.zeros_like(l_ref)
 
     cl = context_lens_ref[b]
-    q = q_ref[0, 0].astype(jnp.float32)                      # (G, hd)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (bs, hd)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)
 
-    scores = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale          # (G, bs)
-    token_idx = n * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    scores = jnp.where(token_idx < cl, scores, NEG_INF)
+    # a page whose first token is already past the context is fully
+    # masked: it would contribute alpha=1, p=0 — skipping the dot and
+    # accumulate is bit-identical, and short-context rows stop paying
+    # MXU time for the padded max-blocks grid
+    @pl.when(n * bs < cl)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
 
-    m_prev = m_ref[...]                                      # (G, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(scores - m_new)                              # (G, bs)
-    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (G, bs)
+        token_idx = n * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        scores = jnp.where(token_idx < cl, scores, NEG_INF)
+
+        m_prev = m_ref[...]                                  # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)                          # (G, bs)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(n == nb - 1)
     def _finish():
@@ -85,6 +92,19 @@ def paged_attention(q: jnp.ndarray,
     kernel = functools.partial(_paged_attn_kernel, bs=bs, nb=nb, scale=scale)
     grid = (b, kv, nb)
 
+    # page index map: clamp past the sequence's last in-context page
+    # ((cl-1)//bs — exactly the pages the kernel's pl.when computes), so
+    # grid steps over fully-masked pages revisit the bound page and issue
+    # no new HBM->VMEM copy (same trick as the ragged kernel): short-
+    # context rows stop paying bandwidth for the padded max-blocks grid,
+    # and table padding entries are never dereferenced.  The outer
+    # maximum makes the clamp total: cl=0 (every in-repo caller clamps
+    # cl>=1, but this is a public entry point) pins page 0 instead of
+    # feeding a negative SMEM index to the table
+    def page_map(bb, h, n, bt, cl):
+        return (bt[bb, jnp.minimum(n, jnp.maximum(cl[bb] - 1, 0) // bs)],
+                0, h, 0)
+
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -92,8 +112,8 @@ def paged_attention(q: jnp.ndarray,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 1, g, hd), lambda bb, h, n, bt, cl: (bb, h, 0, 0)),
-                pl.BlockSpec((1, bs, 1, hd), lambda bb, h, n, bt, cl: (bt[bb, n], 0, h, 0)),
-                pl.BlockSpec((1, bs, 1, hd), lambda bb, h, n, bt, cl: (bt[bb, n], 0, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd), page_map),
+                pl.BlockSpec((1, bs, 1, hd), page_map),
             ],
             out_specs=pl.BlockSpec((1, 1, g, hd), lambda bb, h, n, bt, cl: (bb, h, 0, 0)),
             scratch_shapes=[

@@ -1,0 +1,158 @@
+"""Pallas TPU ragged segment-attention kernel (native, segment-tiled).
+
+The prefill half of a fused :class:`~repro.serving.batch_scheduler.
+IterationBatch`: each prompt chunk ("segment") is a dense (L,) tile of
+queries at arbitrary absolute positions, attending its own sequence's
+pool-resident KV through a per-segment block table under a
+segment-blocked causal mask.
+
+PR 3 lowered this by flatten-and-repeat onto the single-query *decode*
+kernel: S·L grid rows, the segment's block table repeated per query row,
+and one (1, 1, G, hd) query tile per MXU step — every page of a chunk's
+context re-gathered once per query token, and the MXU fed single-token
+tiles exactly where Sarathi-style chunked prefill concentrates work.
+This kernel is the native formulation:
+
+* **grid (segment, kv_head, kv_page)** — one online-softmax pass per
+  (segment, head) pair, pages innermost so each page of a segment's
+  context is DMA'd into VMEM exactly ONCE and reduced against the whole
+  (L, G, hd) query tile (an (L·G, bs) MXU step instead of L separate
+  (G, bs) steps);
+* **scalar-prefetched block tables** — like the decode kernel, the
+  per-segment table and page bound live in SMEM and feed the BlockSpec
+  index maps, so Pallas double-buffers the HBM→VMEM page copies;
+* **per-segment page bounds** — a segment only *visits* pages up to
+  ``max(positions) // bs``: beyond its bound the k/v index maps clamp to
+  the bound page, and consecutive grid steps with an unchanged block
+  index issue no new copy (the standard Pallas revisit trick), while
+  ``pl.when`` skips the compute.  Short chunks in a batch padded to a
+  long table width stop paying bandwidth or MXU time for pages they can
+  never attend;
+* **online softmax** in fp32 VMEM scratch (running max / denominator),
+  identical accumulation scheme to the decode kernel.
+
+Padding query rows (j >= the chunk's real length) carry position 0,
+attend token 0 of the (clamped) first page, and produce garbage the
+caller discards — they can never NaN (token 0 is always unmasked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ragged_attn_kernel(block_tables_ref,   # (S, nb) SMEM (scalar prefetch)
+                        page_bounds_ref,    # (S,)    SMEM (scalar prefetch)
+                        q_ref,              # (1, L, 1, G, hd) VMEM
+                        pos_ref,            # (1, L, 1) VMEM
+                        k_ref,              # (1, bs, 1, hd) VMEM (gathered page)
+                        v_ref,              # (1, bs, 1, hd) VMEM
+                        o_ref,              # (1, L, 1, G, hd) VMEM
+                        acc_ref,            # (L, G, hd) f32 scratch
+                        m_ref,              # (L, G, 1) f32 scratch
+                        l_ref,              # (L, G, 1) f32 scratch
+                        *, bs: int, nb: int, scale: float):
+    s = pl.program_id(0)
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # pages past the segment's bound are never gathered (the index map
+    # clamps to the bound page — no new DMA) and never reduced
+    @pl.when(n <= page_bounds_ref[s])
+    def _compute():
+        lq, g = q_ref.shape[1], q_ref.shape[3]
+        hd = q_ref.shape[4]
+        q = q_ref[0, :, 0].reshape(lq * g, hd).astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (L*G, bs)
+        scores = scores.reshape(lq, g, bs)
+        # segment-blocked causal mask: query (s, j) at absolute position
+        # pos[j] sees pool tokens of its own table at indices <= pos[j]
+        token_idx = n * bs + jax.lax.broadcasted_iota(
+            jnp.int32, (lq, g, bs), 2)
+        pos = pos_ref[0]                                      # (L, 1)
+        scores = jnp.where(pos[:, :, None] >= token_idx, scores, NEG_INF)
+
+        m_prev = m_ref[...]                                   # (L, G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=2, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)                           # (L, G, bs)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=2, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.reshape(lq * g, bs), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(lq, g, hd)
+        m_ref[...] = m_new
+
+    @pl.when(n == nb - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, :, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ragged_segment_attention(q: jnp.ndarray,
+                             k_pool: jnp.ndarray,
+                             v_pool: jnp.ndarray,
+                             block_tables: jnp.ndarray,
+                             positions: jnp.ndarray,
+                             interpret: bool = False) -> jnp.ndarray:
+    """q (S, L, KV, G, hd); pools (N, bs, KV, hd); tables (S, nb);
+    positions (S, L) absolute position per query token.  Returns
+    (S, L, KV, G, hd).  See ``kernels/ref.py`` for mask semantics."""
+    s, lq, kv, g, hd = q.shape
+    if q.size == 0:        # absent prefill part (decode-only iteration)
+        return q
+    _, bs, _, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    scale = hd ** -0.5
+    # last page each segment can attend: max position // bs (padding rows
+    # sit at position 0 and never raise the bound)
+    page_bounds = jnp.max(positions, axis=1) // bs            # (S,)
+    pos3 = positions.reshape(s, lq, 1)
+
+    kernel = functools.partial(_ragged_attn_kernel, bs=bs, nb=nb, scale=scale)
+    grid = (s, kv, nb)
+
+    def page_map(ss, h, n, bt, bounds):
+        return (bt[ss, jnp.minimum(n, bounds[ss])], 0, h, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, lq, 1, g, hd),
+                             lambda ss, h, n, bt, bounds: (ss, 0, h, 0, 0)),
+                pl.BlockSpec((1, lq, 1),
+                             lambda ss, h, n, bt, bounds: (ss, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd), page_map),
+                pl.BlockSpec((1, bs, 1, hd), page_map),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, lq, 1, g, hd),
+                lambda ss, h, n, bt, bounds: (ss, 0, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((lq, g, hd), jnp.float32),
+                pltpu.VMEM((lq, g, 1), jnp.float32),
+                pltpu.VMEM((lq, g, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, lq, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, page_bounds, q, pos3, k_pool, v_pool)

@@ -66,12 +66,27 @@ def ragged_segment_attention_ref(q: jnp.ndarray,
     block_tables: (S, max_blocks)   int32 — one table per segment
     positions:    (S, L)            int32 absolute position per token
     returns:      (S, L, KV, G, hd)
+
+    The gather is *segment-bounded*, mirroring the native Pallas kernel
+    (``kernels/ragged_attention.py``): pages past a segment's last
+    attendable page (``max(positions) // bs``) are clamped to that bound
+    page instead of dereferencing the table's padding entries, so a
+    short chunk in a batch padded to a long table width re-reads one
+    already-hot page rather than touching cold pool blocks it can never
+    attend.  Bounded pages are fully masked either way — the output is
+    bit-identical to an unbounded gather.
     """
     s, _, kv, g, hd = q.shape
+    if q.size == 0:        # absent prefill part (decode-only iteration)
+        return q
     bs = k_pool.shape[1]
-    s_max = block_tables.shape[1] * bs
-    k = k_pool[block_tables].reshape(s, s_max, kv, hd)
-    v = v_pool[block_tables].reshape(s, s_max, kv, hd)
+    nb = block_tables.shape[1]
+    s_max = nb * bs
+    bounds = jnp.max(positions, axis=1) // bs                    # (S,)
+    page_idx = jnp.minimum(jnp.arange(nb)[None, :], bounds[:, None])
+    bt = jnp.take_along_axis(block_tables, page_idx, axis=1)
+    k = k_pool[bt].reshape(s, s_max, kv, hd)
+    v = v_pool[bt].reshape(s, s_max, kv, hd)
     scores = jnp.einsum("slkgd,stkd->skglt", q, k).astype(jnp.float32) / (hd ** 0.5)
     keep = positions[:, None, None, :, None] >= \
         jnp.arange(s_max)[None, None, None, None, :]

@@ -95,6 +95,16 @@ class ServingCluster:
         self._by_id = {e.instance_id: e for e in self.engines}
         assert len(self._by_id) == len(self.engines), \
             "engine instance_ids must be unique"
+        # donated in-place pools: each instance must own its pool buffer.
+        # Two engines sharing one PagedModelRunner would have iteration A
+        # donate (and overwrite, in place) the very buffer iteration B is
+        # about to read — build per-instance runners with
+        # ``PagedModelRunner.clone()`` instead (compiled fns stay shared;
+        # pool buffers never are)
+        runners = {id(e.runner) for e in self.engines}
+        assert len(runners) == len(self.engines), \
+            "engines must not share a PagedModelRunner (in-place donated " \
+            "KV pools); use runner.clone() per instance"
         self.orch = orchestrator
         self.pipelined = pipelined
         self.oom_feedback = oom_feedback

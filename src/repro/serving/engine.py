@@ -67,10 +67,35 @@ class PagedModelRunner:
 
     Pool: (L, 2, num_blocks, block_size, n_kv, hd).  Decode is batched
     across sequences at arbitrary positions via block tables.
+
+    **In-place pool semantics** (``donate_pool``, default on): every
+    jitted step function *donates* the pool argument, so XLA writes the
+    updated pool into the very buffer it read — one resident pool buffer
+    per runner for the lifetime of the process, zero pool-copy bytes per
+    dispatch.  Without donation each dispatch materializes a second
+    full-size pool buffer just to change a few KV rows (and the pre-PR5
+    out-of-jit ``at[].set`` writes in ``prefill``/``copy_block`` copied
+    the whole pool *again* to write one block).  The donation invariant:
+    a pool reference passed to a step function is DEAD on return — every
+    call site here rebinds ``self.pool`` from the function's result in
+    the same statement, and nothing else may retain a pool reference
+    across a dispatch.  ``donate_pool=False`` keeps the copying
+    behaviour as a differential baseline (token streams are identical;
+    only buffer traffic changes).
+
+    ``ragged_backend`` picks the lowering for the fused iteration's
+    prefill attention (`kernels.ops.ragged_segment_attention`): the
+    native segment-tiled kernel ("pallas"/"interpret"), the pure-jnp
+    segment-bounded oracle ("ref"), or the legacy flatten-and-repeat
+    lowering onto the decode kernel ("flat"/"flat_interpret"/"flat_ref",
+    kept for differential tests).  Defaults to ``backend``.
     """
 
     def __init__(self, model: LanguageModel, params, num_blocks: int,
-                 block_size: int, max_batch: int = 8, backend: Optional[str] = None):
+                 block_size: int, max_batch: int = 8,
+                 backend: Optional[str] = None,
+                 ragged_backend: Optional[str] = None,
+                 donate_pool: bool = True):
         cfg = model.cfg
         assert model.uniform_kind == "attn", "paged runner serves attention archs"
         assert cfg.sliding_window is None, "windowed paged decode: see DESIGN.md"
@@ -78,6 +103,8 @@ class PagedModelRunner:
         self.block_size, self.num_blocks = block_size, num_blocks
         self.max_batch = max_batch
         self.backend = backend or kops.default_backend()
+        self.ragged_backend = ragged_backend or self.backend
+        self.donate_pool = donate_pool
         hd = cfg.resolved_head_dim
         self.pool = jnp.zeros(
             (cfg.num_layers, 2, num_blocks, block_size, cfg.num_kv_heads, hd),
@@ -88,10 +115,37 @@ class PagedModelRunner:
         # device->host transfers of already-computed arrays (np.asarray
         # on a result) execute no op and are not counted on either path.
         self.n_dispatches = 0
-        self._decode_fn = self._build_decode()
+        self._decode_fn = self._jit_pool(self._build_decode())
         self._prefill_fn = jax.jit(self.model.prefill)
-        self._suffix_fn = self._build_suffix_prefill()
-        self._fused_fn = self._build_fused()
+        self._suffix_fn = self._jit_pool(self._build_suffix_prefill(),
+                                         static_argnames=("n_cached",))
+        self._fused_fn = self._jit_pool(self._build_fused())
+        self._scatter_fn = self._jit_pool(self._build_scatter_prefill(),
+                                          pool_argnum=0)
+        self._copy_block_fn = self._jit_pool(self._build_copy_block(),
+                                             pool_argnum=0)
+
+    def _jit_pool(self, fn, pool_argnum: int = 1, **kw):
+        """jit a step function that threads the KV pool in and out; with
+        ``donate_pool`` the pool argument's buffer is donated so the
+        update happens in place (the returned pool aliases the input)."""
+        if self.donate_pool:
+            kw["donate_argnums"] = (pool_argnum,)
+        return jax.jit(fn, **kw)
+
+    def pool_address(self) -> Optional[int]:
+        """Device buffer address of the pool, or None when the runtime
+        doesn't expose one.  With donation active the address is stable
+        across dispatches (the perf-guard test and the fusion benchmark's
+        ``pool_bytes_copied_per_iter`` metric both watch it).  May block
+        on an in-flight dispatch — call between synced iterations only.
+        Only a *missing* API degrades to None: a RuntimeError (e.g. a
+        deleted buffer — a stale reference surviving past its donation)
+        must propagate, not masquerade as an unsupported probe."""
+        try:
+            return self.pool.unsafe_buffer_pointer()
+        except (AttributeError, NotImplementedError):
+            return None
 
     def jit_cache_size(self) -> int:
         """Total compiled specializations across the runner's jitted entry
@@ -100,23 +154,37 @@ class PagedModelRunner:
         than break benchmarks/tests if a future release drops it."""
         return sum(getattr(f, "_cache_size", lambda: 0)() for f in
                    (self._decode_fn, self._prefill_fn, self._suffix_fn,
-                    self._fused_fn))
+                    self._fused_fn, self._scatter_fn, self._copy_block_fn))
 
     # -- prefill: run the model once, scatter its contiguous KV into pages ---
     def prefill(self, tokens: jnp.ndarray, block_table: List[int]):
-        """tokens (S,) int32 -> last-token logits (V,). Fills the pool."""
-        s = tokens.shape[0]
-        self.n_dispatches += 1
+        """tokens (S,) int32 -> last-token logits (V,). Fills the pool.
+
+        Two dispatches: the model prefill and the (donated) pool scatter
+        — the scatter used to be an out-of-jit ``at[].set`` that copied
+        the entire pool to write one prompt's pages, and was not counted
+        in ``n_dispatches`` at all."""
+        nb = -(-tokens.shape[0] // self.block_size)
+        self.n_dispatches += 2
         logits, cache = self._prefill_fn(self.params, tokens[None])
-        kv = cache["kv"]                                   # (L,2,1,S,kv,hd)
-        bs = self.block_size
-        nb = -(-s // bs)
-        pad = nb * bs - s
-        kv = jnp.pad(kv, [(0, 0), (0, 0), (0, 0), (0, pad), (0, 0), (0, 0)])
-        kv = kv.reshape(kv.shape[0], 2, nb, bs, *kv.shape[4:])
         bt = jnp.asarray(block_table[:nb], jnp.int32)
-        self.pool = self.pool.at[:, :, bt].set(kv)
+        self.pool = self._scatter_fn(self.pool, cache["kv"], bt)
         return logits[0]
+
+    def _build_scatter_prefill(self):
+        bs = self.block_size
+
+        def scatter(pool, kv, bt):
+            """kv (L,2,1,S,kv,hd) contiguous prefill KV -> the pages in
+            ``bt``; pool donated, so the scatter is in place."""
+            s = kv.shape[3]
+            nb = bt.shape[0]
+            kv = jnp.pad(kv, [(0, 0), (0, 0), (0, 0), (0, nb * bs - s),
+                              (0, 0), (0, 0)])
+            kv = kv.reshape(kv.shape[0], 2, nb, bs, *kv.shape[4:])
+            return pool.at[:, :, bt].set(kv)
+
+        return scatter
 
     # -- chunk prefill: attend over resident KV, compute only new tokens ------
     def prefill_suffix(self, tokens: jnp.ndarray, block_table: List[int],
@@ -143,9 +211,18 @@ class PagedModelRunner:
         return logits
 
     def copy_block(self, src: int, dst: int):
-        """Copy-on-write data path: duplicate one physical block."""
+        """Copy-on-write data path: duplicate one physical block.  One
+        jitted (donated) dispatch moving exactly one block — the old
+        out-of-jit ``at[].set`` rebuilt the whole pool per copy, and
+        baked the block ids into the op (src/dst are traced scalars
+        here, so every copy shares one compiled specialization)."""
         self.n_dispatches += 1
-        self.pool = self.pool.at[:, :, dst].set(self.pool[:, :, src])
+        self.pool = self._copy_block_fn(self.pool, src, dst)
+
+    def _build_copy_block(self):
+        def copy(pool, src, dst):
+            return pool.at[:, :, dst].set(pool[:, :, src])
+        return copy
 
     def _build_suffix_prefill(self):
         cfg = self.cfg
@@ -187,7 +264,7 @@ class PagedModelRunner:
             logits = lm_logits(params, x[:, -1], cfg)
             return logits[0], pool
 
-        return jax.jit(step, static_argnames=("n_cached",))
+        return step
 
     # -- fused ragged iteration: one dispatch per engine step -----------------
     def run_iteration(self, batch: IterationBatch) -> jnp.ndarray:
@@ -199,7 +276,13 @@ class PagedModelRunner:
         a cluster loop can issue the next engine's iteration while this
         one runs; the caller syncs (one transfer) only when it actually
         consumes the token values.  The per-chunk path pays K+1 dispatches
-        and K blocking argmax syncs for the same work."""
+        and K blocking argmax syncs for the same work.
+
+        The pool argument is donated: ``self.pool`` is rebound from the
+        call's result in the same statement, so the dead input reference
+        can never be observed, and the next-token output is a distinct
+        (non-aliased) buffer — deferring its host sync via
+        :class:`TokenBuffer` never touches donated storage."""
         self.n_dispatches += 1
         # numpy arrays go straight to the jitted call: the C++ dispatch
         # path converts them far cheaper than 12 python-level jnp.asarray
@@ -215,6 +298,7 @@ class PagedModelRunner:
         cfg = self.cfg
         hd = cfg.resolved_head_dim
         backend = self.backend
+        ragged_backend = self.ragged_backend
 
         def step(params, pool, tokens_p, positions_p, tables_p,
                  tokens_d, positions_d, tables_d, write_slots, sample_rows,
@@ -253,7 +337,7 @@ class PagedModelRunner:
                 # context
                 op = kops.ragged_segment_attention(
                     qg[:tp].reshape(sp, lmax, cfg.num_kv_heads, g, hd),
-                    kp, vp, tables_p, positions_p, backend=backend)
+                    kp, vp, tables_p, positions_p, backend=ragged_backend)
                 od = kops.paged_attention(
                     qg[tp:], kp, vp, tables_d, positions_d + 1,
                     backend=backend)
@@ -268,7 +352,7 @@ class PagedModelRunner:
             logits = lm_logits(params, rows, cfg)          # (S, V)
             return jnp.argmax(logits, -1).astype(jnp.int32), new_pool
 
-        return jax.jit(step)
+        return step
 
     # -- batched paged decode --------------------------------------------------
     def _build_decode(self):
@@ -307,7 +391,7 @@ class PagedModelRunner:
             logits = lm_logits(params, x[:, 0], cfg)
             return logits, new_pool
 
-        return jax.jit(step)
+        return step
 
     def decode_batch(self, tokens: np.ndarray, positions: np.ndarray,
                      block_tables: np.ndarray, live: np.ndarray):
@@ -324,17 +408,30 @@ class PagedModelRunner:
         pool, *sharing* this runner's compiled step functions (the jitted
         callables close over config/backend only; params and pool are
         traced arguments).  A multi-instance cluster built from clones
-        pays for one compile per shape bucket, not one per instance."""
+        pays for one compile per shape bucket, not one per instance.
+
+        Safe under donation: donation is per *call*, not per compiled
+        function — each clone owns its own pool buffer and donates only
+        that buffer when it dispatches, so instances never alias (and a
+        shared jitted fn called concurrently from cluster worker threads
+        donates each caller's pool independently).  The fresh pool is
+        built from static shape/dtype, never by reading the source
+        runner's buffer — cloning is legal even while the source has a
+        dispatch in flight."""
         c = object.__new__(PagedModelRunner)
         c.model, c.cfg, c.params = self.model, self.cfg, self.params
         c.block_size, c.num_blocks = self.block_size, self.num_blocks
         c.max_batch, c.backend = self.max_batch, self.backend
-        c.pool = jnp.zeros_like(self.pool)
+        c.ragged_backend = self.ragged_backend
+        c.donate_pool = self.donate_pool
+        c.pool = jnp.zeros(self.pool.shape, self.pool.dtype)
         c.n_dispatches = 0
         c._decode_fn = self._decode_fn
         c._prefill_fn = self._prefill_fn
         c._suffix_fn = self._suffix_fn
         c._fused_fn = self._fused_fn
+        c._scatter_fn = self._scatter_fn
+        c._copy_block_fn = self._copy_block_fn
         return c
 
 
@@ -351,7 +448,13 @@ class TokenBuffer:
     exactly once, on first access — so the device->host round-trip (and
     the wait for the producing dispatch) happens only when a token value
     is actually consumed: fed into a later iteration's flatten, checked
-    against ``eos_token``, or materialized at request finish."""
+    against ``eos_token``, or materialized at request finish.
+
+    Donation audit: the held array is the dispatch's next-token *output*
+    — a buffer XLA allocates fresh (outputs alias only donated inputs,
+    and the pool's shape can't alias a token vector), so a deferred
+    ``host()`` read is safe no matter how many further iterations have
+    donated and overwritten the pool in the meantime."""
 
     __slots__ = ("_dev", "_host")
 

@@ -13,7 +13,8 @@ later chunks), and `n_prefill_seqs` prompt segments in the batch costs
 
     t = t_base + beta * n_decode + gamma * prefill_tokens
              + gamma_cached * cached_tokens
-             + beta_prefill * n_prefill_seqs                   [seconds]
+             + beta_prefill * n_prefill_seqs
+             + hbm_bytes / hbm_bandwidth                       [seconds]
 
 which reproduces the paper's two key observations: decode dominates
 (>96.6% of latency for typical output lengths) and per-request decode
@@ -33,6 +34,25 @@ ragged batch in ONE dispatch — the per-iteration fixed overhead `t_base`
 is paid once and amortized across every segment, and only a small ragged
 mask / metadata cost `beta_seg_fused` remains per segment
 (``iteration_time(..., fused=True)``).
+
+Two memory-system effects of the zero-copy engine hot path (PR 5) are
+priced explicitly:
+
+* **Pool-copy traffic** — a jitted step without buffer donation
+  materializes a second full-size KV-pool buffer per dispatch (a
+  read+write of `pool_bytes` through HBM at `hbm_gbps`); donated
+  in-place pools price those bytes at 0.
+* **Segment-bounded attention** — the native ragged kernel gathers each
+  page of a chunk's (bounded) context exactly once per chunk, while the
+  flatten-and-repeat lowering re-gathers the batch-padded table width
+  once per query *token* (S·L decode-style rows), so its extra traffic
+  scales with chunk length × padded context.
+
+Both are genuine HBM traffic, so both flow through one term: the
+simulator sums them into ``hbm_bytes`` (copies count read+write, gathers
+read-only) and ``iteration_time`` prices it at ``hbm_gbps``.  With the
+default knobs (``donate_pool=True``, ``ragged_native=True``) the term is
+0 and the trajectory is unchanged.
 """
 from __future__ import annotations
 
@@ -50,17 +70,28 @@ class CostModel:
     #                                extra dispatch + blocking argmax sync (s)
     beta_seg_fused: float = 0.00008  # per segment, fused single-dispatch
     #                                path: ragged mask / metadata only (s)
+    kv_bytes_per_token: int = 131072  # fp16 KV per token (8B-class:
+    #                                32 layers x 2 x 8 kv heads x 128 hd x 2B)
+    hbm_gbps: float = 800.0        # device memory bandwidth (GB/s) pricing
+    #                                non-donated pool-copy traffic
 
     def iteration_time(self, n_decode: int, prefill_tokens: int,
                        cached_tokens: int = 0,
                        n_prefill_seqs: int = 0,
-                       fused: bool = False) -> float:
+                       fused: bool = False,
+                       hbm_bytes: int = 0) -> float:
         seg = (self.beta_seg_fused if fused else self.beta_prefill) \
             * n_prefill_seqs
         return (self.t_base + self.beta * n_decode
                 + self.gamma * prefill_tokens
                 + self.gamma_cached * cached_tokens
-                + seg)
+                + seg + hbm_bytes / (self.hbm_gbps * 1e9))
+
+    def pool_bytes(self, kv_capacity_tokens: int) -> int:
+        """Resident KV-pool size of an instance with the given capacity —
+        a non-donated dispatch moves 2x this (read + write) just to
+        thread the pool through."""
+        return kv_capacity_tokens * self.kv_bytes_per_token
 
     def decode_tok_per_s(self, typical_batch: int = 8) -> float:
         """Per-request decode speed at a typical batch (Eq. 1 `k`)."""
@@ -68,9 +99,12 @@ class CostModel:
 
 
 LLAMA3_8B = CostModel("llama3-8b")
-# 13B-class: ~1.7x per-token cost, same structure (§7.5 scalability study)
+# 13B-class: ~1.7x per-token cost, same structure (§7.5 scalability study);
+# llama2-13b is MHA, so its KV rows are much fatter than the 8B's GQA
+# (40 layers x 2 x 40 heads x 128 hd x 2B)
 LLAMA2_13B = CostModel("llama2-13b", t_base=0.013, beta=0.0021, gamma=0.00026,
                        gamma_cached=0.000013, beta_prefill=0.0007,
-                       beta_seg_fused=0.00014)
+                       beta_seg_fused=0.00014, kv_bytes_per_token=1638400,
+                       hbm_gbps=800.0)
 
 COST_MODELS = {m.name: m for m in (LLAMA3_8B, LLAMA2_13B)}

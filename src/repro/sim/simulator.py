@@ -33,7 +33,12 @@ from repro.core import (
     TopoScheduler,
 )
 from repro.core.orchestrator import HardwareProfile
-from repro.serving.batch_scheduler import BatchScheduler, KeyPrefixMatcher
+from repro.serving.batch_scheduler import (
+    TABLE_BUCKET_FLOOR,
+    BatchScheduler,
+    KeyPrefixMatcher,
+    pad_bucket,
+)
 from repro.serving.kv_cache import BlockManager
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import CompletionRecord, Request, reset_request_ids
@@ -62,10 +67,15 @@ class SimInstance:
                  max_batch: int = 16, prefix_caching: bool = False,
                  policy: Optional[SchedulerPolicy] = None,
                  prefill_chunk_tokens: Optional[int] = None,
-                 fused_iteration: bool = True):
+                 fused_iteration: bool = True,
+                 donate_pool: bool = True,
+                 ragged_native: bool = True):
         self.instance_id = instance_id
         self.cost = cost
         self.fused_iteration = fused_iteration
+        self.donate_pool = donate_pool
+        self.ragged_native = ragged_native
+        self.pool_bytes = cost.pool_bytes(kv_capacity_tokens)
         self.bm = BlockManager(kv_capacity_tokens // block_size, block_size)
         self.cache = PrefixCache(block_size) if prefix_caching else None
         self.busy = False
@@ -128,9 +138,32 @@ class SimInstance:
         plan = self.sched.plan(now)
         if plan is None:
             return [], None
+        hbm_bytes = 0
+        if self.fused_iteration and not self.ragged_native and plan.chunks:
+            # flatten-and-repeat attention lowers each chunk onto S·L
+            # decode-style query rows, and every row re-gathers the
+            # batch-padded table width — page traffic scales with chunk
+            # length × padded context, where the native segment-tiled
+            # kernel gathers each (bounded) page once per chunk.  Only
+            # the fused path uses the ragged lowering; the per-chunk
+            # path gathers exactly its resident context either way.
+            bs = self.bm.block_size
+            nbp = pad_bucket(max(self.bm.blocks_needed(c.end)
+                                 for c in plan.chunks), TABLE_BUCKET_FLOOR)
+            extra_rows = sum(
+                (c.end - c.start) * nbp * bs - c.end for c in plan.chunks)
+            hbm_bytes += extra_rows * self.cost.kv_bytes_per_token
+        if not self.donate_pool:
+            # every pool-threading dispatch materializes a second pool
+            # buffer (full read + write): 1 for the fused path, one per
+            # chunk + one decode dispatch for the per-chunk path
+            n_disp = 1 if self.fused_iteration else \
+                len(plan.chunks) + (1 if plan.decode else 0)
+            hbm_bytes += 2 * n_disp * self.pool_bytes
         dt = self.cost.iteration_time(
             len(plan.decode), plan.prefill_tokens, plan.context_tokens,
-            n_prefill_seqs=len(plan.chunks), fused=self.fused_iteration)
+            n_prefill_seqs=len(plan.chunks), fused=self.fused_iteration,
+            hbm_bytes=hbm_bytes)
         finished = []
         for r in plan.decode:
             r.output_len += 1
@@ -172,6 +205,14 @@ class SimConfig:
     # default execution model) instead of one dispatch per prefill chunk
     # plus a decode dispatch; False reproduces the per-chunk pricing
     fused_iteration: bool = True
+    # donated in-place KV pool (the engine's default): pool-copy bytes
+    # cost 0; False prices one full pool read+write per dispatch, the
+    # pre-donation engine behaviour
+    donate_pool: bool = True
+    # native segment-bounded ragged attention (each chunk re-reads only
+    # its own context); False prices the flatten-and-repeat lowering,
+    # which re-reads the batch-padded table width per chunk
+    ragged_native: bool = True
 
 
 @dataclasses.dataclass
@@ -251,7 +292,9 @@ class Simulation:
             SimInstance(i, cfg.cost, cfg.kv_capacity_tokens, max_batch=cfg.max_batch,
                         prefix_caching=cfg.prefix_caching, policy=inst_policy,
                         prefill_chunk_tokens=cfg.prefill_chunk_tokens,
-                        fused_iteration=cfg.fused_iteration)
+                        fused_iteration=cfg.fused_iteration,
+                        donate_pool=cfg.donate_pool,
+                        ragged_native=cfg.ragged_native)
             for i in range(cfg.n_instances)]
         self.balancer = LoadBalancer(
             self.scheduler, self.dispatcher, self.orch, self._submit,

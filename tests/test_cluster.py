@@ -293,6 +293,21 @@ def test_workflow_wires_cluster_probe_and_feedback():
     assert r0._fused_fn is r1._fused_fn and r0.pool is not r1.pool
 
 
+def test_cluster_rejects_engines_sharing_a_runner(model_and_params):
+    """Donated in-place pools make a shared PagedModelRunner structurally
+    unsafe (instance A's dispatch overwrites — in place — the buffer
+    instance B is about to read): the cluster refuses to build one."""
+    model, params = model_and_params
+    runner = PagedModelRunner(model, params, num_blocks=16, block_size=8,
+                              max_batch=2)
+    engines = [LLMEngine(runner, instance_id=i, max_batch=2)
+               for i in range(2)]
+    orch = Orchestrator(hardware=HardwareProfile(
+        decode_tok_per_s=20.0, kv_capacity_tokens=128))
+    with pytest.raises(AssertionError, match="share a PagedModelRunner"):
+        ServingCluster(engines, orch)
+
+
 # =============================================================================
 # Workflow failure surfacing
 # =============================================================================

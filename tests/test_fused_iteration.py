@@ -8,11 +8,17 @@ ONE jitted device dispatch.  Covered here:
 * token identity vs the legacy per-chunk path (with and without a cached
   shared prefix, mid-block chunk boundaries, mixed prefill+decode
   iterations, staggered arrivals under memory pressure);
+* the donated in-place KV pool: buffer-address stability across fused
+  AND legacy iterations (donation actually happened), the probe's
+  ability to detect copies with donation off, token identity donated vs
+  non-donated under preemption pressure, jitted prefill-scatter /
+  copy-block helpers, and clone() pool ownership;
+* the native ragged kernel vs the flatten-and-repeat lowering: token
+  identity end to end (ref and Pallas-interpret backends);
 * exactly one device dispatch per iteration (vs K+1 on the legacy path);
 * a recompile-count guard: the bucketed static shapes bound `jax.jit`
   cache growth across a varied workload;
-* the ragged segment-mask attention helper vs the paged kernel
-  (interpret mode) and vs a dense causal oracle.
+* the ragged segment-mask attention lowerings vs the ref oracle.
 """
 import jax
 import jax.numpy as jnp
@@ -55,11 +61,11 @@ def _mixed_reqs(seed=11, sys_len=16, n=4, uniq=6, max_new=4):
 
 
 def _serve(model_and_params, *, fused, chunk, cache, reqs=None,
-           staggered=False, num_blocks=64):
+           staggered=False, num_blocks=64, **runner_kw):
     model, params = model_and_params
     reset_request_ids()
     runner = PagedModelRunner(model, params, num_blocks=num_blocks,
-                              block_size=8, max_batch=4)
+                              block_size=8, max_batch=4, **runner_kw)
     eng = LLMEngine(runner, max_batch=4, enable_prefix_cache=cache,
                     prefill_chunk_tokens=chunk, fused_iteration=fused)
     reqs = reqs if reqs is not None else _mixed_reqs()
@@ -118,6 +124,145 @@ def test_fused_survives_preemption_pressure(model_and_params):
     eng, fused = _serve(model_and_params, fused=True, chunk=8, cache=False,
                         reqs=reqs(), num_blocks=24)
     assert fused == legacy
+
+
+# =============================================================================
+# donated in-place pool (zero-copy hot path)
+# =============================================================================
+
+
+def _drain_tracking_pool(model_and_params, *, donate, fused=True,
+                         num_blocks=24, chunk=8):
+    """Drain a preemption-pressure workload recording the pool's device
+    buffer address after every iteration; returns (addresses, outputs)."""
+    model, params = model_and_params
+    reset_request_ids()
+    runner = PagedModelRunner(model, params, num_blocks=num_blocks,
+                              block_size=8, max_batch=4, donate_pool=donate)
+    eng = LLMEngine(runner, max_batch=4, enable_prefix_cache=True,
+                    prefill_chunk_tokens=chunk, fused_iteration=fused)
+    for r in _mixed_reqs(seed=3, sys_len=8, n=5, uniq=19, max_new=6):
+        eng.submit(r)
+    addrs, done = [], []
+    for _ in range(4000):
+        done.extend(eng.step())
+        addrs.append(runner.pool_address())
+        if not eng.running and not eng.waiting:
+            break
+    assert len(done) == 5
+    return addrs, sorted((d.msg_id, tuple(d.output_tokens)) for d in done)
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_pool_buffer_address_stable_under_donation(model_and_params, fused):
+    """Donation actually happened: every dispatch of a drain — fused
+    iterations, and the legacy path's prefill-scatter / copy-block /
+    suffix / decode helpers — updates the ONE pool buffer in place,
+    including across preemption-by-recompute.  Skips cleanly where the
+    runtime exposes no buffer address."""
+    addrs, _ = _drain_tracking_pool(model_and_params, donate=True, fused=fused)
+    if addrs[0] is None:
+        pytest.skip("runtime exposes no unsafe_buffer_pointer")
+    assert len(set(addrs)) == 1, \
+        f"donated pool buffer moved: {len(set(addrs))} distinct addresses"
+
+
+def test_pool_address_probe_detects_copies(model_and_params):
+    """The guard above is meaningful: with donation off, the same drain
+    materializes fresh pool buffers (the address moves) — if this ever
+    stops detecting copies, the stability assertion proves nothing."""
+    addrs, _ = _drain_tracking_pool(model_and_params, donate=False)
+    if addrs[0] is None:
+        pytest.skip("runtime exposes no unsafe_buffer_pointer")
+    assert len(set(addrs)) > 1
+
+
+def test_donated_vs_nondonated_token_identical(model_and_params):
+    """Donation changes buffer traffic only: token streams are identical
+    under prefix-cache + chunked-prefill + preemption pressure."""
+    _, donated = _drain_tracking_pool(model_and_params, donate=True)
+    _, plain = _drain_tracking_pool(model_and_params, donate=False)
+    assert donated == plain
+
+
+def test_prefill_and_copy_block_are_jitted_dispatches(model_and_params):
+    """The legacy out-of-jit full-pool ``at[].set`` writes are gone:
+    ``prefill`` is exactly two counted dispatches (model + donated
+    scatter), ``copy_block`` exactly one, and neither moves the pool
+    buffer."""
+    model, params = model_and_params
+    reset_request_ids()
+    runner = PagedModelRunner(model, params, num_blocks=16, block_size=8,
+                              max_batch=2)
+    a0 = runner.pool_address()
+    rng = np.random.default_rng(0)
+    d0 = runner.n_dispatches
+    runner.prefill(jnp.asarray(rng.integers(0, 500, 12), jnp.int32), [3, 4])
+    assert runner.n_dispatches - d0 == 2
+    d0 = runner.n_dispatches
+    runner.copy_block(3, 7)
+    assert runner.n_dispatches - d0 == 1
+    np.testing.assert_array_equal(np.asarray(runner.pool[:, :, 7]),
+                                  np.asarray(runner.pool[:, :, 3]))
+    if a0 is not None:
+        assert runner.pool_address() == a0
+    # copy_block shares ONE compiled specialization across block ids
+    d0 = runner.n_dispatches
+    cache0 = runner.jit_cache_size()
+    runner.copy_block(4, 8)
+    runner.copy_block(7, 9)
+    assert runner.n_dispatches - d0 == 2
+    assert runner.jit_cache_size() == cache0
+
+
+def test_clone_owns_pool_under_donation(model_and_params):
+    """Clones share compiled (donating) step fns but never a pool
+    buffer: dispatching one instance leaves the other's pool untouched
+    and at its own stable address."""
+    model, params = model_and_params
+    reset_request_ids()
+    r0 = PagedModelRunner(model, params, num_blocks=16, block_size=8,
+                          max_batch=2)
+    r1 = r0.clone()
+    assert r0._fused_fn is r1._fused_fn
+    a0, a1 = r0.pool_address(), r1.pool_address()
+    rng = np.random.default_rng(1)
+    r0.prefill(jnp.asarray(rng.integers(0, 500, 8), jnp.int32), [0])
+    assert not np.asarray(r0.pool[:, :, 0] == 0).all()
+    assert np.asarray(r1.pool == 0).all()
+    if a1 is not None:
+        assert r1.pool_address() == a1 and r0.pool_address() == a0
+        assert a0 != a1
+
+
+# =============================================================================
+# native ragged kernel vs flatten-and-repeat, end to end
+# =============================================================================
+
+
+def test_native_vs_flat_ragged_token_identical_under_pressure(model_and_params):
+    """The native segment-bounded ragged lowering generates exactly the
+    flatten-and-repeat lowering's tokens under prefix-cache +
+    chunked-prefill + preemption pressure (tight pool)."""
+    reqs = lambda: _mixed_reqs(seed=9, sys_len=16, n=5, uniq=13, max_new=6)
+    _, native = _serve(model_and_params, fused=True, chunk=8, cache=True,
+                       reqs=reqs(), num_blocks=24, ragged_backend="ref")
+    _, flat = _serve(model_and_params, fused=True, chunk=8, cache=True,
+                     reqs=reqs(), num_blocks=24, ragged_backend="flat_ref")
+    assert native == flat
+
+
+def test_native_pallas_kernel_token_identical_in_engine(model_and_params):
+    """The real Pallas kernel (interpret mode) inside the fused engine
+    step produces the ref backend's exact tokens — small workload, the
+    interpreted grid is slow."""
+    reqs = lambda: _mixed_reqs(seed=5, sys_len=8, n=2, uniq=5, max_new=3)
+    _, ref = _serve(model_and_params, fused=True, chunk=8, cache=True,
+                    reqs=reqs(), num_blocks=32, ragged_backend="ref")
+    _, native = _serve(model_and_params, fused=True, chunk=8, cache=True,
+                       reqs=reqs(), num_blocks=32,
+                       ragged_backend="interpret")
+    assert native == ref
 
 
 # =============================================================================
@@ -295,18 +440,20 @@ def _ragged_case(key, seg_specs, kv=2, g=4, hd=64, bs=8, nb=3, n_pool=32):
             jnp.asarray(positions, jnp.int32))
 
 
+@pytest.mark.parametrize("backend", ["interpret", "flat_interpret", "flat_ref"])
 @pytest.mark.parametrize("seg_specs", [
     [(1, 9), (1, 4), (1, 17)],            # single-token segments
     [(6, 0), (5, 8), (1, 12), (1, 3)],    # ragged mix, padded tile rows
     [(8, 13)],                            # mid-block chunk start
 ])
-def test_ragged_segment_attention_matches_paged_kernel(seg_specs):
-    """The ref oracle and the Pallas kernel (interpret mode, via the
-    flatten-and-repeat lowering) agree on the segment-blocked causal
-    mask."""
+def test_ragged_segment_attention_matches_oracle(seg_specs, backend):
+    """Every lowering — the native segment-tiled Pallas kernel
+    ("interpret") and the legacy flatten-and-repeat lowering onto the
+    decode path ("flat_*") — agrees with the ref oracle on the
+    segment-blocked causal mask."""
     args = _ragged_case(jax.random.PRNGKey(0), seg_specs)
     ref = kops.ragged_segment_attention(*args, backend="ref")
-    ker = kops.ragged_segment_attention(*args, backend="interpret")
+    ker = kops.ragged_segment_attention(*args, backend=backend)
     np.testing.assert_allclose(np.asarray(ref), np.asarray(ker),
                                rtol=2e-5, atol=2e-5)
 

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.paged_attention import paged_attention
-from repro.kernels.ref import paged_attention_ref
+from repro.kernels.ragged_attention import ragged_segment_attention
+from repro.kernels.ref import paged_attention_ref, ragged_segment_attention_ref
 
 
 def _make_case(key, b, kv, g, hd, bs, nb_per_seq, n_pool, dtype):
@@ -66,3 +67,81 @@ def test_paged_attention_ignores_garbage_beyond_context():
     v2 = v_pool.at[bt[0, 3]].set(-1e4)
     out2 = paged_attention(q, k2, v2, bt, cl, interpret=True)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# =============================================================================
+# native ragged segment-attention kernel
+# =============================================================================
+
+
+def _make_ragged_case(key, seg_specs, kv, g, hd, bs, nb, n_pool, dtype):
+    """Segments of (length, n_cached): each segment's queries sit at
+    absolute positions [n_cached, n_cached + length) of its own sequence
+    — mid-block boundaries whenever n_cached % bs != 0 — tiled into a
+    dense (S, L) block with padding rows where length < L."""
+    ks = jax.random.split(key, 4)
+    k_pool = jax.random.normal(ks[0], (n_pool, bs, kv, hd), dtype)
+    v_pool = jax.random.normal(ks[1], (n_pool, bs, kv, hd), dtype)
+    perm = np.asarray(jax.random.permutation(ks[2], n_pool))
+    s, lmax = len(seg_specs), max(n for n, _ in seg_specs)
+    tables = np.stack([perm[i * nb:(i + 1) * nb] for i in range(s)])
+    positions = np.zeros((s, lmax), np.int32)
+    for i, (seg_len, n_cached) in enumerate(seg_specs):
+        positions[i, :seg_len] = np.arange(n_cached, n_cached + seg_len)
+    q = jax.random.normal(ks[3], (s, lmax, kv, g, hd), dtype)
+    return (q, k_pool, v_pool, jnp.asarray(tables, jnp.int32),
+            jnp.asarray(positions, jnp.int32))
+
+
+RAGGED_SWEEP = [
+    # (seg_specs [(len, n_cached)...], kv, g, hd, bs, nb, n_pool)
+    # uneven lengths + padding rows, chunks starting mid-block (13 % 8)
+    ([(6, 0), (3, 13), (1, 20)], 2, 4, 64, 8, 4, 40),
+    # n_cached > 0 everywhere: every chunk resumes a partially-written
+    # last resident block
+    ([(5, 3), (5, 11), (5, 19)], 1, 8, 128, 16, 2, 8),
+    # chunk both starting AND ending mid-block, wide table
+    ([(7, 9)], 4, 2, 64, 4, 6, 32),
+    # MQA-ish single-group heads, single-token segments (decode-like)
+    ([(1, 0), (1, 7), (1, 15), (1, 30)], 8, 1, 32, 8, 4, 64),
+]
+
+
+@pytest.mark.parametrize("case", RAGGED_SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_kernel_matches_oracle_sweep(case, dtype):
+    """Native kernel (interpret mode) vs the jnp oracle across shapes,
+    head groupings, mid-block chunk boundaries, resumed contexts
+    (n_cached > 0), uneven segment lengths, and padded tile rows —
+    padding rows compare too (both paths compute position-0 attention
+    for them, and they must stay NaN-free)."""
+    seg_specs, kv, g, hd, bs, nb, n_pool = case
+    args = _make_ragged_case(jax.random.PRNGKey(11), seg_specs,
+                             kv, g, hd, bs, nb, n_pool, dtype)
+    out_k = ragged_segment_attention(*args, interpret=True)
+    out_r = ragged_segment_attention_ref(*args)
+    assert out_k.shape == out_r.shape == args[0].shape
+    assert not np.isnan(np.asarray(out_k, np.float32)).any()
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ragged_kernel_page_bounds_ignore_out_of_reach_pages():
+    """A segment never visits pages past max(positions)//bs: poisoning
+    the table entries beyond a segment's bound — even with garbage
+    *block ids* — cannot change its output (the index map clamps to the
+    bound page)."""
+    seg_specs = [(4, 6), (2, 0)]           # bounds: page 1, page 0
+    q, kp, vp, bt, pos = _make_ragged_case(
+        jax.random.PRNGKey(3), seg_specs, 2, 2, 64, 8, 4, 40, jnp.float32)
+    out = ragged_segment_attention(q, kp, vp, bt, pos, interpret=True)
+    poisoned = np.array(bt)
+    poisoned[0, 2:] = 39                   # unrelated garbage block
+    poisoned[1, 1:] = 39
+    kp2 = kp.at[39].set(1e4)
+    vp2 = vp.at[39].set(-1e4)
+    out2 = ragged_segment_attention(q, kp2, vp2, jnp.asarray(poisoned),
+                                    pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), rtol=1e-6)

@@ -60,6 +60,48 @@ def test_single_app_qa():
     assert k.summary()["avg"] < p.summary()["avg"]
 
 
+def test_zero_copy_pricing_knobs():
+    """The cost model prices the zero-copy engine hot path: donated
+    pools copy 0 bytes (no change to the default trajectory), while
+    ``donate_pool=False`` pays a full pool read+write per dispatch and
+    ``ragged_native=False`` re-reads the batch-padded table width per
+    chunk — both strictly slower, with identical scheduling decisions."""
+    from repro.sim import SimConfig, Simulation
+    from repro.sim.cost_model import LLAMA3_8B
+
+    # CostModel arithmetic: donation zeroes the traffic term exactly
+    t0 = LLAMA3_8B.iteration_time(4, 64, 128, n_prefill_seqs=2, fused=True)
+    copy = 2 * LLAMA3_8B.pool_bytes(12288)          # one full read + write
+    tc = LLAMA3_8B.iteration_time(4, 64, 128, n_prefill_seqs=2, fused=True,
+                                  hbm_bytes=copy)
+    assert tc > t0
+    assert tc - t0 == pytest.approx(copy / (LLAMA3_8B.hbm_gbps * 1e9))
+
+    kw = dict(apps=[make_app("QA", "G+M")], policy="kairos", rate=4.0,
+              duration=40.0, seed=7, prefill_chunk_tokens=512)
+    base = Simulation(SimConfig(**kw)).run()
+    copying = Simulation(SimConfig(**kw, donate_pool=False)).run()
+    # same workload, strictly worse latency when every dispatch pays a
+    # full pool read+write
+    assert len(base.workflows) == len(copying.workflows)
+    assert copying.summary()["avg"] > base.summary()["avg"]
+
+    # ragged_native=False: a chunk re-reads the batch-padded table width
+    # instead of its own context — strictly slower per iteration
+    from repro.serving.request import Request
+    from repro.sim.simulator import SimInstance
+
+    def one_iter_dt(native):
+        inst = SimInstance(0, LLAMA3_8B, kv_capacity_tokens=4096,
+                           prefill_chunk_tokens=32, ragged_native=native)
+        inst.submit(Request(agent_name="a", msg_id="m", prompt_len=100,
+                            true_output_len=4, max_new_tokens=4))
+        _, dt = inst.step(0.0)
+        return dt
+
+    assert one_iter_dt(native=False) > one_iter_dt(native=True)
+
+
 def test_latency_distributions_learned():
     from repro.sim import SimConfig, Simulation
     cfg = SimConfig(apps=colocated_apps(), policy="kairos", **KW)
