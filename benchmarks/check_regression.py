@@ -37,6 +37,11 @@ import sys
 #                ~1.25x speedup): the ratios are wall-clock-derived and
 #                one noisy min-of-N drain on a loaded shared runner can
 #                dip them; a real regression lands well below the floor.
+#   ceilings   — hardware-independent metrics with absolute ceilings
+#                (e.g. tracing overhead in percent must stay <= 5)
+#   baseline_floors — metrics that must stay >= the committed baseline's
+#                value (e.g. goodput under SLO from the deterministic
+#                seeded sim must not drop as the code evolves)
 GATES = {
     "iteration_fusion": {
         "wall": ("wall_per_token_fused_ms",),
@@ -57,6 +62,21 @@ GATES = {
         # (measured ~1.2x on a 2-cpu host; more on wider CI runners)
         "ratio_floors": {"overlap_speedup_4": 1.0},
     },
+    "latency_breakdown": {
+        "wall": ("wall_per_token_traced_ms",),
+        "exact": (),
+        "host_exact": (),
+        "ratio_floors": {},
+        # the tracer's enabled cost on the real engine path: ring-buffer
+        # appends must stay in the noise (measured ~1% on a 2-cpu host;
+        # the ceiling leaves room for runner jitter, a real hot-path
+        # mistake lands at 10s of percent)
+        "ceilings": {"tracing_overhead_pct": 5.0},
+        # the seeded sim is deterministic: goodput under SLO moves only
+        # when scheduling/dispatch behaviour changes — a drop is a real
+        # policy regression, not noise
+        "baseline_floors": ("goodput_slo",),
+    },
 }
 EMPTY_GATE = {"wall": (), "exact": (), "host_exact": (), "ratio_floors": {}}
 
@@ -67,10 +87,12 @@ def check(ci: dict, base: dict, tolerance: float, strict: bool) -> int:
     if gate is None:
         print(f"note: no gate set for bench {ci.get('bench')!r}")
         gate = EMPTY_GATE
-    wall_metrics = gate["wall"]
-    exact_metrics = gate["exact"]
-    host_exact_metrics = gate["host_exact"]
-    ratio_floors = gate["ratio_floors"]
+    wall_metrics = gate.get("wall", ())
+    exact_metrics = gate.get("exact", ())
+    host_exact_metrics = gate.get("host_exact", ())
+    ratio_floors = gate.get("ratio_floors", {})
+    ceilings = gate.get("ceilings", {})
+    baseline_floors = gate.get("baseline_floors", ())
     failures, notes = [], []
     # wall-clock is only comparable on the same hardware class: a baseline
     # pinned on a dev box must not fail CI runners (and vice versa) — the
@@ -111,6 +133,24 @@ def check(ci: dict, base: dict, tolerance: float, strict: bool) -> int:
         status = "FAIL" if cm[name] < floor else "ok"
         print(f"{status}: {name} = {cm[name]:.3f} (floor {floor:g})")
         if cm[name] < floor:
+            failures.append(name)
+    for name, ceiling in ceilings.items():
+        if name not in cm:
+            notes.append(f"missing ceiling metric {name!r}")
+            continue
+        status = "FAIL" if cm[name] > ceiling else "ok"
+        print(f"{status}: {name} = {cm[name]:.3f} (ceiling {ceiling:g})")
+        if cm[name] > ceiling:
+            failures.append(name)
+    for name in baseline_floors:
+        if name not in cm or name not in bm:
+            notes.append(f"missing baseline-floor metric {name!r}")
+            continue
+        dropped = cm[name] < bm[name]
+        status = "FAIL" if dropped else "ok"
+        print(f"{status}: {name} = {cm[name]:.4f} vs baseline {bm[name]:.4f} "
+              f"(must not drop)")
+        if dropped:
             failures.append(name)
     for n in notes:
         print(f"note: {n}")

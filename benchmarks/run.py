@@ -38,6 +38,7 @@ def main() -> None:
         fig18_ablation,
         iteration_fusion,
         kernel_bench,
+        latency_breakdown,
         overhead,
         prefix_reuse,
     )
@@ -46,7 +47,7 @@ def main() -> None:
                fig09_dispatch_preemption, fig14_single_app, fig15_colocated,
                fig16_sorting_accuracy, fig17_larger_llm, fig18_ablation,
                overhead, kernel_bench, prefix_reuse, chunked_prefill,
-               iteration_fusion, cluster_overlap]
+               iteration_fusion, cluster_overlap, latency_breakdown]
 
     print("name,us_per_call,derived")
     failures = 0

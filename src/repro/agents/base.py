@@ -20,6 +20,7 @@ from repro.agents.messaging import Headers, MessageBus
 from repro.core import KairosScheduler, Orchestrator
 from repro.core.orchestrator import HardwareProfile
 from repro.models import build_model
+from repro.obs.trace import NULL_TRACER, TraceContext, Tracer
 from repro.serving import LLMEngine, PagedModelRunner, ServingCluster
 from repro.serving.request import Request
 
@@ -76,16 +77,18 @@ class Workflow:
                  num_blocks: int = 128, block_size: int = 8, max_batch: int = 4,
                  prefix_caching: bool = False,
                  prefill_chunk_tokens: Optional[int] = None,
-                 pipelined: bool = True, llm_timeout_s: float = 300.0):
+                 pipelined: bool = True, llm_timeout_s: float = 300.0,
+                 tracer: Tracer = NULL_TRACER):
         self.app_name = app_name
         self.prefix_caching = prefix_caching
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.pipelined = pipelined
         self.llm_timeout_s = llm_timeout_s
+        self.tracer = tracer
         self.bus = MessageBus()
         self.orch = Orchestrator(hardware=HardwareProfile(
             decode_tok_per_s=20.0, kv_capacity_tokens=num_blocks * block_size),
-            prefix_caching=prefix_caching)
+            prefix_caching=prefix_caching, tracer=tracer)
         self.agents: Dict[str, BaseAgent] = {}
         self.engines: List[LLMEngine] = []
         self._engine_cfg = (n_instances, num_blocks, block_size, max_batch)
@@ -129,11 +132,12 @@ class Workflow:
                 runner, instance_id=i, max_batch=mb,
                 enable_prefix_cache=self.prefix_caching,
                 policy=KairosScheduler(self.orch.priority_score),
-                prefill_chunk_tokens=self.prefill_chunk_tokens))
+                prefill_chunk_tokens=self.prefill_chunk_tokens,
+                tracer=self.tracer))
         self.cluster = ServingCluster(
             self.engines, self.orch,
             scheduler=KairosScheduler(self.orch.priority_score),
-            pipelined=self.pipelined)
+            pipelined=self.pipelined, tracer=self.tracer)
 
     def add_agent(self, agent_name: str, agent_class, use_model: str = "",
                   system_prompt: Optional[str] = None):
@@ -153,6 +157,13 @@ class Workflow:
             max_new_tokens=max_new_tokens,
             shared_prefix_len=shared_prefix_len, cache_key=agent_name,
             arrival_time=time.monotonic(), app_start_time=metadata.app_start_time)
+        if self.tracer.enabled:
+            # workflow trace context: msg_id is the trace id, this LLM
+            # call is one span, descended from the upstream agent stage —
+            # obs/critical_path.py stitches these into the workflow DAG
+            req.trace = TraceContext(trace_id=metadata.msg_id,
+                                     span_id=req.req_id,
+                                     parent_name=metadata.upstream_name)
         ev = threading.Event()
         box: list = []
         self._submissions.put((req, ev, box))
@@ -201,6 +212,25 @@ class Workflow:
         t = threading.Thread(target=work, daemon=True)
         t.start()
         self._threads.append(t)
+
+    # ------------------------------------------------------------ observability
+    def trace_spans(self):
+        """Agent-stage spans stitched from the shared tracer's event
+        streams (one span per LLM call, linked by upstream agent)."""
+        from repro.obs.critical_path import spans_from_events
+        return spans_from_events(self.tracer.events())
+
+    def critical_path(self, msg_id: str):
+        """End-to-end critical path of one workflow: the causal chain of
+        agent stages ending at the last finisher, with per-stage
+        queue/prefill/decode and orchestration-gap breakdown."""
+        from repro.obs.critical_path import critical_path
+        return critical_path(self.trace_spans(), msg_id)
+
+    def metrics_snapshot(self) -> dict:
+        """The cluster's flattened metrics registry snapshot."""
+        assert self.cluster is not None, "call add_engine first"
+        return self.cluster.metrics_snapshot()
 
     def prefix_cache_stats(self) -> dict:
         """Aggregate prefill-token savings across engine instances."""

@@ -8,6 +8,7 @@ from typing import Callable, List
 
 from repro.core.orchestrator import Orchestrator
 from repro.core.scheduler import SchedulerPolicy
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.request import Request, RequestState
 
 
@@ -16,7 +17,8 @@ class LoadBalancer:
                  orchestrator: Orchestrator,
                  submit_fn: Callable[[int, Request], None],
                  max_dispatch_per_tick: int = 64,
-                 strict_head: bool = False):
+                 strict_head: bool = False,
+                 tracer: Tracer = NULL_TRACER):
         self.scheduler = scheduler
         self.dispatcher = dispatcher
         self.orch = orchestrator
@@ -28,11 +30,17 @@ class LoadBalancer:
         # undispatchable requests ("remains in the queue awaiting the next
         # scheduling round", §6), which avoids dispatch-level HoL.
         self.strict_head = strict_head
+        self.tracer = tracer
         self.n_scheduled = 0
 
     def enqueue(self, req: Request):
         req.state = RequestState.QUEUED
         self.queue.append(req)
+        if self.tracer.enabled:
+            self.tracer.emit("submit", req_id=req.req_id,
+                             agent=req.agent_name, msg_id=req.msg_id,
+                             ts=req.arrival_time,
+                             upstream=req.upstream_name)
 
     def tick(self, now: float):
         """One scheduling round: order queue by policy (§5), dispatch in
@@ -52,6 +60,15 @@ class LoadBalancer:
                 if self.strict_head:
                     break
                 continue
+            if self.tracer.enabled:
+                if force:
+                    self.tracer.emit("migrate-candidate", req_id=req.req_id,
+                                     agent=req.agent_name, msg_id=req.msg_id,
+                                     ts=now, waited=now - req.arrival_time,
+                                     to=iid)
+                self.tracer.emit("dispatch", req_id=req.req_id,
+                                 agent=req.agent_name, msg_id=req.msg_id,
+                                 ts=now, to=iid)
             self.submit_fn(iid, req)
             dispatched.append(req)
             self.n_scheduled += 1

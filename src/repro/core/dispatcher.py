@@ -22,6 +22,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.memory_model import MemoryRamp
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.request import Request
 
 SLOT_LEN = 0.5  # seconds (§6: empirically favourable trade-off)
@@ -64,11 +65,13 @@ class TimeSlotDispatcher:
     name = "kairos"
 
     def __init__(self, instances: List[InstanceModel], slot_len: float = SLOT_LEN,
-                 oom_cooldown: float = 2.0, admit_probe=None):
+                 oom_cooldown: float = 2.0, admit_probe=None,
+                 tracer: Tracer = NULL_TRACER):
         self.instances = {i.instance_id: i for i in instances}
         self.slot_len = slot_len
         self.oom_cooldown = oom_cooldown
         self.admit_probe = admit_probe
+        self.tracer = tracer
         self.n_rejected = 0
         # per-round occupancy cache: recomputed when `now` changes, updated
         # in place on accept — keeps a scheduling round at O(ramps) total.
@@ -85,6 +88,9 @@ class TimeSlotDispatcher:
     def on_oom(self, instance_id: int, now: float):
         self.instances[instance_id].fenced_until = now + self.oom_cooldown
         self._cache_now = float("nan")
+        if self.tracer.enabled:
+            self.tracer.emit("oom-fence", instance_id=instance_id, ts=now,
+                             until=now + self.oom_cooldown)
 
     def is_fenced(self, instance_id: int, now: float) -> bool:
         """True while the instance sits in its post-OOM cooldown — the

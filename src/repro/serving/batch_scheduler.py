@@ -41,6 +41,7 @@ from typing import Callable, Dict, List, Mapping, Optional, Tuple
 import numpy as np
 
 from repro.core.scheduler import FCFSScheduler, SchedulerPolicy
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.kv_cache import BlockManager
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request, RequestState
@@ -340,6 +341,12 @@ class BatchScheduler:
     on_preempt:
         Backend hook called with the victim request (e.g. the engine
         drops its pending next-token).
+    tracer / instance_id:
+        Observability: lifecycle events (admit, prefill-chunk, preempt,
+        evict, finish) are emitted onto ``tracer``'s ring for
+        ``instance_id``.  Defaults to the disabled :data:`NULL_TRACER` —
+        every emit site is guarded on ``tracer.enabled`` so un-traced
+        runs pay one branch.
     """
 
     def __init__(self, bm: BlockManager, *,
@@ -350,7 +357,9 @@ class BatchScheduler:
                  max_batch: Optional[int] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  watermark: float = 0.95,
-                 on_preempt: Optional[Callable[[Request], None]] = None):
+                 on_preempt: Optional[Callable[[Request], None]] = None,
+                 tracer: Tracer = NULL_TRACER,
+                 instance_id: int = -1):
         assert prefill_chunk_tokens is None or prefill_chunk_tokens > 0
         self.bm = bm
         self.policy = policy or FCFSScheduler()
@@ -361,6 +370,10 @@ class BatchScheduler:
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.watermark = watermark
         self.on_preempt = on_preempt
+        self.tracer = tracer
+        self.instance_id = instance_id
+        self._now = 0.0          # timestamp of the current plan() step, so
+        #                          preempt/evict emissions inside it are stamped
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.stats = SchedStats()
@@ -438,7 +451,11 @@ class BatchScheduler:
                     self.bm.ref_release(b)
                 break
             if need > self.bm.free_blocks and self.prefix_cache is not None:
-                self.prefix_cache.evict(self.bm, need - self.bm.free_blocks)
+                n_ev = self.prefix_cache.evict(self.bm,
+                                               need - self.bm.free_blocks)
+                if n_ev and self.tracer.enabled:
+                    self.tracer.emit("evict", instance_id=self.instance_id,
+                                     ts=now, n=int(n_ev))
             if need > self.bm.free_blocks:
                 for b in cached:          # abort: hand the refs back
                     self.bm.ref_release(b)
@@ -470,6 +487,11 @@ class BatchScheduler:
             self.running.append(req)
             admitted.append(req)
             self.stats.n_admitted += 1
+            if self.tracer.enabled:
+                self.tracer.emit("admit", req_id=req.req_id,
+                                 instance_id=self.instance_id,
+                                 agent=req.agent_name, msg_id=req.msg_id,
+                                 ts=now, cached=n_cached)
             # prefill_tokens is charged as chunks are composed (so a
             # request preempted mid-prefill counts only executed tokens);
             # cache savings are realized here, at the match
@@ -499,9 +521,16 @@ class BatchScheduler:
         self._inserted_blocks.pop(victim.req_id, None)
         victim.state = RequestState.PREEMPTED
         victim.n_preemptions += 1
+        if self.tracer.enabled:
+            self.tracer.emit("preempt", req_id=victim.req_id,
+                             instance_id=self.instance_id,
+                             agent=victim.agent_name, msg_id=victim.msg_id,
+                             ts=self._now,
+                             lost=victim.prefilled_len + victim.output_len)
         victim.output_len = 0                      # recompute from scratch
         victim.output_tokens.clear()
         victim.prefilled_len = 0
+        victim.first_token_time = -1.0             # recompute re-times TTFT
         self.waiting.append(victim)
         self.stats.n_preempted += 1
         self.stats.recent_oom = True
@@ -530,9 +559,14 @@ class BatchScheduler:
             return need - self.bm.free_blocks
 
         while self.running and deficit() > 0:
-            if (self.prefix_cache is not None
-                    and self.prefix_cache.evict(self.bm, deficit())):
-                continue
+            if self.prefix_cache is not None:
+                n = self.prefix_cache.evict(self.bm, deficit())
+                if n:
+                    if self.tracer.enabled:
+                        self.tracer.emit("evict",
+                                         instance_id=self.instance_id,
+                                         ts=self._now, n=int(n))
+                    continue
             self._preempt_one()
 
     # ------------------------------------------------------------ composition
@@ -541,6 +575,7 @@ class BatchScheduler:
         batch growable, then hand out prefill chunks under the token
         budget and pick the decode set.  Returns None when idle."""
         budget = self.prefill_chunk_tokens
+        self._now = now
         self._admit(now)
         if not self.running:
             return None
@@ -580,6 +615,12 @@ class BatchScheduler:
                     take = aligned
             chunks.append(PrefillChunk(r, start, start + take,
                                        is_last=start + take == r.prompt_len))
+            if self.tracer.enabled:
+                self.tracer.emit("prefill-chunk", req_id=r.req_id,
+                                 instance_id=self.instance_id,
+                                 agent=r.agent_name, msg_id=r.msg_id, ts=now,
+                                 start=start, end=start + take,
+                                 last=start + take == r.prompt_len)
             r.prefilled_len = start + take
             prefill_tokens += take
             context_tokens += start
@@ -607,6 +648,11 @@ class BatchScheduler:
             decode.append(r)
         if not chunks and not decode:
             return None
+        if self.tracer.enabled:
+            self.tracer.emit("iteration", instance_id=self.instance_id,
+                             ts=now, n_chunks=len(chunks),
+                             n_decode=len(decode),
+                             n_tokens=prefill_tokens + len(decode))
         return IterationPlan(chunks, decode, cow, prefill_tokens,
                              context_tokens)
 
@@ -634,6 +680,11 @@ class BatchScheduler:
         """Backend reports a completed request: release memory + book it."""
         req.state = RequestState.FINISHED
         req.finish_time = t
+        if self.tracer.enabled:
+            self.tracer.emit("finish", req_id=req.req_id,
+                             instance_id=self.instance_id,
+                             agent=req.agent_name, msg_id=req.msg_id, ts=t,
+                             out=req.output_len)
         self.bm.free(req.req_id)
         self.running.remove(req)
         self._pending_hashes.pop(req.req_id, None)

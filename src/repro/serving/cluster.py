@@ -47,6 +47,8 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional, Sequence
 
+from repro.obs.metrics import merge_snapshots
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.engine import LLMEngine
 from repro.serving.request import CompletionRecord, Request
 
@@ -80,12 +82,20 @@ class ServingCluster:
         differential baseline for benchmarks/tests.
     clock:
         Injectable time source (tests use a deterministic one).
+    tracer:
+        Observability sink shared by the whole cluster: control-plane
+        events (submit/dispatch/oom-fence) land on ring ``-1``, each
+        engine's on its own ring.  Pass the SAME tracer to the engines
+        (they emit admit/first-token/decode/finish); the cluster wires
+        it into the balancer and a default-constructed dispatcher.
+        Defaults to disabled.
     """
 
     def __init__(self, engines: Sequence[LLMEngine], orchestrator, *,
                  scheduler=None, dispatcher=None, pipelined: bool = True,
                  oom_feedback: bool = True,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer: Tracer = NULL_TRACER):
         from repro.core.balancer import LoadBalancer
         from repro.core.dispatcher import InstanceModel, TimeSlotDispatcher
         from repro.core.scheduler import KairosScheduler
@@ -109,19 +119,21 @@ class ServingCluster:
         self.pipelined = pipelined
         self.oom_feedback = oom_feedback
         self.clock = clock
+        self.tracer = tracer
         self._pool: Optional[ThreadPoolExecutor] = None
         if dispatcher is None:
             dispatcher = TimeSlotDispatcher(
                 [InstanceModel(e.instance_id, e.kv_capacity_tokens)
                  for e in self.engines],
-                admit_probe=self.can_admit)
+                admit_probe=self.can_admit, tracer=tracer)
         elif getattr(dispatcher, "admit_probe", None) is None:
             dispatcher.admit_probe = self.can_admit
         self.dispatcher = dispatcher
         self.balancer = LoadBalancer(
             scheduler or KairosScheduler(self.orch.priority_score),
             self.dispatcher, self.orch,
-            lambda iid, req: self._by_id[iid].submit(req))
+            lambda iid, req: self._by_id[iid].submit(req),
+            tracer=tracer)
 
     # ------------------------------------------------------------------ intake
     def submit(self, req: Request):
@@ -199,9 +211,19 @@ class ServingCluster:
                 upstream_name=r.upstream_name, app_name=r.app_name,
                 start_time=r.arrival_time, end_time=r.finish_time,
                 prompt_len=r.prompt_len, output_len=r.output_len,
-                exec_start_time=r.exec_start_time))
+                exec_start_time=r.exec_start_time,
+                first_token_time=r.first_token_time))
             self.dispatcher.on_finish(r.instance_id, r.req_id)
         return done
+
+    # ----------------------------------------------------------------- metrics
+    def metrics_snapshot(self) -> dict:
+        """All engines' metrics flattened under ``engine<i>.`` prefixes,
+        plus cluster-level queue depth."""
+        snap = merge_snapshots({f"engine{e.instance_id}": e.metrics_snapshot()
+                                for e in self.engines})
+        snap["queue_depth"] = float(len(self.balancer.queue))
+        return snap
 
     # ------------------------------------------------------------------ drains
     def run_until_drained(self, max_steps: int = 100_000,

@@ -20,6 +20,8 @@ import numpy as np
 
 from repro.core.scheduler import SchedulerPolicy
 from repro.kernels import ops as kops
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.models import attention as attn_mod
 from repro.models.layers import embed_tokens, lm_logits, rms_norm, swiglu
 from repro.models.model import LanguageModel
@@ -109,11 +111,14 @@ class PagedModelRunner:
         self.pool = jnp.zeros(
             (cfg.num_layers, 2, num_blocks, block_size, cfg.num_kv_heads, hd),
             model.dtype)
-        # perf counter: device *op dispatches* issued (jitted calls plus
-        # standalone ops like the legacy path's per-chunk jnp.argmax —
-        # each is a separately launched device computation).  Plain
-        # device->host transfers of already-computed arrays (np.asarray
-        # on a result) execute no op and are not counted on either path.
+        # perf counters now live on a metrics registry (obs.metrics);
+        # n_dispatches is a property alias over it — device *op
+        # dispatches* issued (jitted calls plus standalone ops like the
+        # legacy path's per-chunk jnp.argmax — each is a separately
+        # launched device computation).  Plain device->host transfers of
+        # already-computed arrays (np.asarray on a result) execute no op
+        # and are not counted on either path.
+        self.metrics = MetricsRegistry()
         self.n_dispatches = 0
         self._decode_fn = self._jit_pool(self._build_decode())
         self._prefill_fn = jax.jit(self.model.prefill)
@@ -124,6 +129,25 @@ class PagedModelRunner:
                                           pool_argnum=0)
         self._copy_block_fn = self._jit_pool(self._build_copy_block(),
                                              pool_argnum=0)
+
+    @property
+    def n_dispatches(self) -> int:
+        """Alias over ``metrics.counter("n_dispatches")`` — kept
+        read/write (``runner.n_dispatches += 1``) so pre-registry call
+        sites and BENCH gates work unchanged."""
+        return int(self.metrics.counter("n_dispatches").value)
+
+    @n_dispatches.setter
+    def n_dispatches(self, v: int):
+        self.metrics.counter("n_dispatches").value = float(v)
+
+    def metrics_snapshot(self) -> dict:
+        """Registry snapshot with the derived gauges refreshed (compiled
+        specializations, resident pool bytes)."""
+        self.metrics.set("jit_cache_size", self.jit_cache_size())
+        self.metrics.set("pool_bytes",
+                         self.pool.size * self.pool.dtype.itemsize)
+        return self.metrics.snapshot()
 
     def _jit_pool(self, fn, pool_argnum: int = 1, **kw):
         """jit a step function that threads the KV pool in and out; with
@@ -425,6 +449,7 @@ class PagedModelRunner:
         c.ragged_backend = self.ragged_backend
         c.donate_pool = self.donate_pool
         c.pool = jnp.zeros(self.pool.shape, self.pool.dtype)
+        c.metrics = MetricsRegistry()
         c.n_dispatches = 0
         c._decode_fn = self._decode_fn
         c._prefill_fn = self._prefill_fn
@@ -541,7 +566,8 @@ class LLMEngine:
                  enable_prefix_cache: bool = False,
                  policy: Optional[SchedulerPolicy] = None,
                  prefill_chunk_tokens: Optional[int] = None,
-                 fused_iteration: bool = True):
+                 fused_iteration: bool = True,
+                 tracer: Tracer = NULL_TRACER):
         self.runner = runner
         self.fused_iteration = fused_iteration
         self._pending: Optional[Tuple[IterationBatch, TokenBuffer]] = None
@@ -553,13 +579,15 @@ class LLMEngine:
         self.max_batch = max_batch
         self.eos_token = eos_token
         self.clock = clock
+        self.tracer = tracer
         self._next_tok: dict[int, int] = {}
         self.sched = BatchScheduler(
             self.bm, policy=policy, prefix_cache=self.prefix_cache,
             matcher=TokenPrefixMatcher(), max_running=max_batch,
             max_batch=runner.max_batch,
             prefill_chunk_tokens=prefill_chunk_tokens,
-            on_preempt=lambda r: self._next_tok.pop(r.req_id, None))
+            on_preempt=lambda r: self._next_tok.pop(r.req_id, None),
+            tracer=tracer, instance_id=instance_id)
 
     @property
     def waiting(self) -> List[Request]:
@@ -593,6 +621,24 @@ class LLMEngine:
     def poll_oom(self) -> bool:
         oom, self.stats.recent_oom = self.stats.recent_oom, False
         return oom
+
+    def metrics_snapshot(self) -> dict:
+        """One flat dict of this instance's counters and gauges: the
+        runner's registry (dispatches, recompiles, pool bytes, iteration
+        histograms) plus scheduler occupancy and prefix-cache stats."""
+        m = self.runner.metrics
+        m.set("queue_depth", len(self.waiting))
+        m.set("running", len(self.running))
+        m.set("kv_used_tokens", self.kv_used_tokens)
+        m.set("kv_cached_tokens", self.kv_cached_tokens)
+        m.set("n_finished", self.stats.n_finished)
+        m.set("n_preempted", self.stats.n_preempted)
+        m.set("n_admitted", self.stats.n_admitted)
+        m.set("prefill_tokens", self.stats.prefill_tokens)
+        m.set("prefill_tokens_saved", self.stats.prefill_tokens_saved)
+        if self.prefix_cache is not None:
+            m.set("prefix_cache_hit_rate", self.prefix_cache.stats.hit_rate())
+        return self.runner.metrics_snapshot()
 
     # ---------------------------------------------------------------- intake
     def submit(self, req: Request):
@@ -632,6 +678,8 @@ class LLMEngine:
             self._pending_finished = self._execute_per_chunk(plan)
             return True
         batch = flatten_plan(plan, self.bm, self._next_tok)
+        self.runner.metrics.observe("iteration_tokens", batch.n_tokens)
+        self.runner.metrics.observe("batch_occupancy", len(batch.segments))
         self._pending = (batch, TokenBuffer(self.runner.run_iteration(batch)))
         return True
 
@@ -660,16 +708,31 @@ class LLMEngine:
         if force_sync or self.eos_token >= 0:
             toks.host()
         finished = []
+        now = self.clock()
+        traced = self.tracer.enabled
         for j, seg in enumerate(batch.segments):
             r = seg.req
             if seg.kind == "prefill":
                 if seg.emits_token:
                     self._next_tok[r.req_id] = TokenRef(toks, j)
+                    # the final chunk's argmax IS the first generated
+                    # token — TTFT is timed at its collection
+                    if r.first_token_time < 0:
+                        r.first_token_time = now
+                    if traced:
+                        self.tracer.emit("first-token", req_id=r.req_id,
+                                         instance_id=self.instance_id,
+                                         agent=r.agent_name,
+                                         msg_id=r.msg_id, ts=now)
                 continue
             fed = self._next_tok[r.req_id]
             r.output_tokens.append(fed)
             r.output_len += 1
             self._next_tok[r.req_id] = TokenRef(toks, j)
+            if traced:
+                self.tracer.emit("decode", req_id=r.req_id,
+                                 instance_id=self.instance_id,
+                                 agent=r.agent_name, msg_id=r.msg_id, ts=now)
             done = (r.output_len >= r.max_new_tokens
                     or (self.eos_token >= 0
                         and int(toks.host()[j]) == self.eos_token))
@@ -701,6 +764,14 @@ class LLMEngine:
                 # and returns them in one transfer instead)
                 self.runner.n_dispatches += 1
                 self._next_tok[c.req.req_id] = int(jnp.argmax(logits))
+                if c.req.first_token_time < 0:
+                    c.req.first_token_time = self.clock()
+                if self.tracer.enabled:
+                    self.tracer.emit("first-token", req_id=c.req.req_id,
+                                     instance_id=self.instance_id,
+                                     agent=c.req.agent_name,
+                                     msg_id=c.req.msg_id,
+                                     ts=c.req.first_token_time)
         for src, dst in plan.cow:
             self.runner.copy_block(src, dst)
         if not plan.decode:

@@ -64,7 +64,11 @@ class Request:
     app_start_time: float = 0.0                 # arrival at the frontend
     arrival_time: float = 0.0                   # arrival at this LLM stage
     exec_start_time: float = -1.0               # LLM execution start
+    first_token_time: float = -1.0              # first generated token (TTFT)
     finish_time: float = -1.0
+
+    # --- observability -------------------------------------------------------
+    trace: Optional[object] = None              # obs.TraceContext when traced
 
     # --- runtime state --------------------------------------------------------
     state: RequestState = RequestState.QUEUED
@@ -113,6 +117,7 @@ class CompletionRecord:
     prompt_len: int
     output_len: int
     exec_start_time: float = -1.0
+    first_token_time: float = -1.0
 
     @property
     def latency(self) -> float:

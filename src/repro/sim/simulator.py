@@ -33,6 +33,7 @@ from repro.core import (
     TopoScheduler,
 )
 from repro.core.orchestrator import HardwareProfile
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.batch_scheduler import (
     TABLE_BUCKET_FLOOR,
     BatchScheduler,
@@ -69,7 +70,8 @@ class SimInstance:
                  prefill_chunk_tokens: Optional[int] = None,
                  fused_iteration: bool = True,
                  donate_pool: bool = True,
-                 ragged_native: bool = True):
+                 ragged_native: bool = True,
+                 tracer: Tracer = NULL_TRACER):
         self.instance_id = instance_id
         self.cost = cost
         self.fused_iteration = fused_iteration
@@ -79,10 +81,12 @@ class SimInstance:
         self.bm = BlockManager(kv_capacity_tokens // block_size, block_size)
         self.cache = PrefixCache(block_size) if prefix_caching else None
         self.busy = False
+        self.tracer = tracer
         self.sched = BatchScheduler(
             self.bm, policy=policy, prefix_cache=self.cache,
             matcher=KeyPrefixMatcher(), max_running=max_batch,
-            prefill_chunk_tokens=prefill_chunk_tokens)
+            prefill_chunk_tokens=prefill_chunk_tokens,
+            tracer=tracer, instance_id=instance_id)
 
     # ------------------------------------------------------------------ intake
     def submit(self, req: Request):
@@ -165,8 +169,23 @@ class SimInstance:
             n_prefill_seqs=len(plan.chunks), fused=self.fused_iteration,
             hbm_bytes=hbm_bytes)
         finished = []
+        traced = self.tracer.enabled
         for r in plan.decode:
             r.output_len += 1
+            # same event schema as the real engine, stamped with SIM time:
+            # the first decode step books the first generated token
+            if r.output_len == 1 and r.first_token_time < 0:
+                r.first_token_time = now + dt
+                if traced:
+                    self.tracer.emit("first-token", req_id=r.req_id,
+                                     instance_id=self.instance_id,
+                                     agent=r.agent_name, msg_id=r.msg_id,
+                                     ts=now + dt)
+            elif traced:
+                self.tracer.emit("decode", req_id=r.req_id,
+                                 instance_id=self.instance_id,
+                                 agent=r.agent_name, msg_id=r.msg_id,
+                                 ts=now + dt)
             if r.output_len >= r.true_output_len:
                 self.sched.finish(r, now + dt)
                 finished.append(r)
@@ -213,6 +232,11 @@ class SimConfig:
     # its own context); False prices the flatten-and-repeat lowering,
     # which re-reads the batch-padded table width per chunk
     ragged_native: bool = True
+    # observability: thread one obs.Tracer through the whole sim control
+    # plane + instances, emitting the SAME event schema as the real
+    # engine path with simulated timestamps (sim-vs-real breakdowns
+    # diff).  The trace lands on Simulation.tracer after run().
+    tracing: bool = False
 
 
 @dataclasses.dataclass
@@ -280,7 +304,9 @@ class Simulation:
         hw = HardwareProfile(
             decode_tok_per_s=cfg.cost.decode_tok_per_s(typical_batch=cfg.max_batch // 2),
             kv_capacity_tokens=cfg.kv_capacity_tokens)
-        self.orch = Orchestrator(hardware=hw, prefix_caching=cfg.prefix_caching)
+        self.tracer: Tracer = Tracer() if cfg.tracing else NULL_TRACER
+        self.orch = Orchestrator(hardware=hw, prefix_caching=cfg.prefix_caching,
+                                 tracer=self.tracer)
         models = [InstanceModel(i, cfg.kv_capacity_tokens)
                   for i in range(cfg.n_instances)]
         self.scheduler, self.dispatcher, strict = self._make_policy(cfg.policy, models)
@@ -294,11 +320,12 @@ class Simulation:
                         prefill_chunk_tokens=cfg.prefill_chunk_tokens,
                         fused_iteration=cfg.fused_iteration,
                         donate_pool=cfg.donate_pool,
-                        ragged_native=cfg.ragged_native)
+                        ragged_native=cfg.ragged_native,
+                        tracer=self.tracer)
             for i in range(cfg.n_instances)]
         self.balancer = LoadBalancer(
             self.scheduler, self.dispatcher, self.orch, self._submit,
-            strict_head=strict)
+            strict_head=strict, tracer=self.tracer)
         self.workflows: Dict[str, WorkflowState] = {}
         self.finished_requests: List[Request] = []
         self._events: List[Tuple[float, int, str, object]] = []
@@ -317,9 +344,11 @@ class Simulation:
                     RoundRobinDispatcher(models, probe), True)
         if policy == "kairos":
             return (KairosScheduler(self.orch.priority_score),
-                    TimeSlotDispatcher(models, admit_probe=probe), True)
+                    TimeSlotDispatcher(models, admit_probe=probe,
+                                       tracer=self.tracer), True)
         if policy == "w/o-priority":
-            return FCFSScheduler(), TimeSlotDispatcher(models, admit_probe=probe), True
+            return FCFSScheduler(), TimeSlotDispatcher(
+                models, admit_probe=probe, tracer=self.tracer), True
         if policy == "w/o-packing":
             # packing removed -> admission-gated rotation (priority retained)
             return (KairosScheduler(self.orch.priority_score),
@@ -388,7 +417,8 @@ class Simulation:
             upstream_name=req.upstream_name, app_name=req.app_name,
             start_time=req.arrival_time, end_time=now,
             prompt_len=req.prompt_len, output_len=req.output_len,
-            exec_start_time=req.exec_start_time))
+            exec_start_time=req.exec_start_time,
+            first_token_time=req.first_token_time))
         downstream = wf.app.route(req.agent_name, self._request_rng(wf, req.agent_name), wf.hops)
         for agent in downstream:
             self._spawn_request(wf, agent, req.agent_name, now + AGENT_OVERHEAD)
