@@ -41,13 +41,15 @@ def main() -> None:
         latency_breakdown,
         overhead,
         prefix_reuse,
+        shard_scale,
     )
 
     modules = [fig03_agent_profiles, fig07_queuing_example, fig08_rank_correlation,
                fig09_dispatch_preemption, fig14_single_app, fig15_colocated,
                fig16_sorting_accuracy, fig17_larger_llm, fig18_ablation,
                overhead, kernel_bench, prefix_reuse, chunked_prefill,
-               iteration_fusion, cluster_overlap, latency_breakdown]
+               iteration_fusion, cluster_overlap, latency_breakdown,
+               shard_scale]
 
     print("name,us_per_call,derived")
     failures = 0

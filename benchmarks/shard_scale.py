@@ -1,0 +1,287 @@
+"""Tensor-parallel engine scaling: sharded KV pool + shard_map iteration.
+
+Runs the real paged engine's fused iteration at tp in {1, 2, 4} on a
+("data", "model") host-level mesh (CPU CI forces the devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; module import
+sets the flag when jax is not yet initialized).  One drain per degree of
+the same shared-prefix + chunked-prefill + decode mix, plus a 2-instance
+x 2-way-TP cluster drain through the full control plane
+(``ServingCluster.on_mesh_slices``).
+
+Measured / asserted per degree:
+
+* **dispatches per iteration == 1** — sharding must not re-split the
+  fused step (the shard_map lowering lives INSIDE the one jitted call),
+* **0 pool-copy bytes per shard per iteration** — donation survives
+  sharding, witnessed per shard by ``unsafe_buffer_pointer`` stability
+  (every shard's buffer address is sampled after every iteration),
+* **token bit-identity vs the tp=1 oracle** — the model runs fp32 here,
+  where the sharded step's fp32-accumulated psums make the summation
+  order the only difference vs the unsharded einsum and the drained
+  token streams match bit-for-bit.  (In bf16 the same reassociation can
+  flip rare argmax near-ties; the fp32 differential is the exactness
+  oracle, see README "Sharded serving".)  The mesh-placed tp=1 runner is
+  additionally pinned bit-identical to the meshless engine: at tp=1 the
+  mesh is placement-only, no shard_map in the lowering.
+* **wall-clock per generated token** at each degree (compile-warm).
+
+Emits BENCH JSON (``--json``); gated by ``check_regression.py``
+(``shard_scale``).  Run:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+PYTHONPATH=src python -m benchmarks.shard_scale [--smoke]``
+"""
+from __future__ import annotations
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row, row, write_bench_json
+
+CHUNK = 8           # per-iteration prefill token budget
+TP_DEGREES = (1, 2, 4)
+
+
+def _model_and_params():
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    # reduced() keeps num_heads=4 / num_kv_heads=2 — widen so 4-way TP
+    # divides; fp32 so the tp>1-vs-tp=1 differential is exact (see
+    # module docstring)
+    cfg = get_config("qwen3-1.7b").reduced()
+    cfg = dataclasses.replace(cfg, num_heads=8, num_kv_heads=4,
+                              head_dim=64, dtype="float32")
+    model = build_model(cfg)
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _workload(cfg: Dict) -> List:
+    """Shared-prefix agent requests: exercises the prefix cache, chunked
+    prefill and (at the small pool size) preemption pressure."""
+    from repro.serving import Request
+    rng = np.random.default_rng(cfg["seed"])
+    prefix = rng.integers(0, 500, cfg["prefix_len"]).astype(np.int32)
+    reqs = []
+    for i in range(cfg["n_reqs"]):
+        toks = np.concatenate(
+            [prefix, rng.integers(0, 500, 5 + (i % 7)).astype(np.int32)])
+        reqs.append(Request(
+            agent_name=f"a{i % 3}", msg_id=f"m{i}", prompt_len=len(toks),
+            prompt_tokens=toks, max_new_tokens=cfg["max_new"],
+            arrival_time=float(i)))
+    return reqs
+
+
+def _addrs(runner):
+    a = runner.pool_address()
+    return a if isinstance(a, tuple) else (a,)
+
+
+def _drive(runner, cfg: Dict) -> Dict:
+    """One fused drain; counts dispatches and per-shard pool address
+    changes (donation witness: every shard's device buffer must stay
+    resident at one address for the whole drain)."""
+    from repro.serving import LLMEngine, reset_request_ids
+    reset_request_ids()
+    eng = LLMEngine(runner, max_batch=cfg["max_batch"],
+                    enable_prefix_cache=True, prefill_chunk_tokens=CHUNK,
+                    fused_iteration=True)
+    pending = _workload(cfg)
+    d0 = runner.n_dispatches
+    prev = _addrs(runner)
+    shard_changes = [0] * len(prev)
+    t0 = time.perf_counter()
+    done, iters = [], 0
+    for _ in range(100_000):
+        if pending:
+            eng.submit(pending.pop(0))
+        before = runner.n_dispatches
+        done.extend(eng.step())
+        if runner.n_dispatches > before:
+            iters += 1
+            cur = _addrs(runner)
+            for s, (a, b) in enumerate(zip(prev, cur)):
+                if a != b:
+                    shard_changes[s] += 1
+            prev = cur
+        elif not pending:
+            break
+    wall = time.perf_counter() - t0
+    tokens = sum(r.output_len for r in done)
+    return {"wall_s": wall, "tokens": tokens, "iters": max(iters, 1),
+            "dispatches": runner.n_dispatches - d0,
+            "n_shards": len(prev),
+            "shard_addr_changes": max(shard_changes),
+            "shard_nbytes": runner.pool.nbytes // max(runner.tp, 1),
+            "outputs": sorted((r.msg_id, tuple(int(t) for t in r.output_tokens))
+                              for r in done)}
+
+
+def _cluster_drain(model, params, cfg: Dict) -> Dict:
+    """2 instances x 2-way TP on 4 host devices under the full Kairos
+    control plane (balancer / time-slot dispatcher / orchestrator)."""
+    import jax
+    from repro.core.orchestrator import HardwareProfile, Orchestrator
+    from repro.serving import Request, ServingCluster, reset_request_ids
+
+    orch = Orchestrator(hardware=HardwareProfile(
+        decode_tok_per_s=20.0,
+        kv_capacity_tokens=cfg["num_blocks"] * cfg["block_size"]))
+    cluster = ServingCluster.on_mesh_slices(
+        model, params, orch, n_instances=2, model_parallel=2,
+        devices=jax.devices()[:4],
+        runner_kwargs=dict(num_blocks=cfg["num_blocks"],
+                           block_size=cfg["block_size"],
+                           max_batch=cfg["max_batch"]),
+        engine_kwargs=dict(max_batch=cfg["max_batch"],
+                           enable_prefix_cache=True,
+                           prefill_chunk_tokens=CHUNK))
+    reset_request_ids()
+    rng = np.random.default_rng(cfg["seed"])
+    prefix = rng.integers(0, 500, cfg["prefix_len"]).astype(np.int32)
+    pending = []
+    for i in range(2 * cfg["n_reqs"]):
+        toks = np.concatenate(
+            [prefix, rng.integers(0, 500, 5 + (i % 7)).astype(np.int32)])
+        pending.append(Request(
+            agent_name=f"a{i % 3}", msg_id=f"c{i}", prompt_len=len(toks),
+            prompt_tokens=toks, max_new_tokens=cfg["max_new"],
+            arrival_time=float(i)))
+    n_submitted = len(pending)
+    done = []
+    for _ in range(100_000):
+        if pending:
+            cluster.submit(pending.pop(0))
+        done.extend(cluster.step())
+        if not pending and not cluster.has_work:
+            break
+    cluster.close()
+    served = {r.instance_id for r in done}
+    return {"finished": len(done), "submitted": n_submitted,
+            "instances_used": len(served)}
+
+
+def measure(smoke: bool = True) -> Dict:
+    import jax
+    from repro.launch.mesh import make_local_mesh
+    from repro.serving import PagedModelRunner
+
+    if jax.device_count() < 4:
+        raise RuntimeError(
+            f"shard_scale needs >= 4 devices (have {jax.device_count()}); "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=8 before "
+            "jax initializes")
+
+    cfg = dict(seed=7, n_reqs=6, prefix_len=16, max_new=6,
+               max_batch=4, num_blocks=24, block_size=8)
+    if not smoke:
+        cfg.update(n_reqs=12, prefix_len=32, max_new=10, num_blocks=48)
+
+    model, params = _model_and_params()
+    out: Dict = {"config": {**cfg, "chunk": CHUNK, "smoke": smoke,
+                            "model": "qwen3-1.7b/reduced-8h4kv-fp32",
+                            "devices": jax.device_count()}}
+
+    runners = {}
+    for tp in TP_DEGREES:
+        mesh = make_local_mesh(tp, devices=jax.devices()[:tp])
+        runners[tp] = PagedModelRunner(
+            model, params, num_blocks=cfg["num_blocks"],
+            block_size=cfg["block_size"], max_batch=cfg["max_batch"],
+            mesh=mesh)
+    oracle = PagedModelRunner(model, params, num_blocks=cfg["num_blocks"],
+                              block_size=cfg["block_size"],
+                              max_batch=cfg["max_batch"])
+
+    base = _drive(oracle, cfg)          # meshless single-device oracle
+    for r in runners.values():
+        _drive(r, cfg)                  # warmup: compile
+    repeats = 3 if smoke else 6
+    runs = {tp: [] for tp in TP_DEGREES}
+    for _ in range(repeats):
+        for tp in TP_DEGREES:
+            runs[tp].append(_drive(runners[tp], cfg))
+    res = {}
+    for tp in TP_DEGREES:
+        r = min(runs[tp], key=lambda x: x["wall_s"])
+        res[tp] = r
+        out[f"wall_per_token_tp{tp}_ms"] = 1e3 * r["wall_s"] / r["tokens"]
+        out[f"dispatches_per_iteration_tp{tp}"] = r["dispatches"] / r["iters"]
+        # per-shard donation witness: bytes copied == address moves x
+        # per-shard buffer size (0 when the donated alias holds)
+        worst = max(x["shard_addr_changes"] for x in runs[tp])
+        out[f"pool_bytes_copied_per_iter_tp{tp}"] = \
+            worst * r["shard_nbytes"] / r["iters"]
+        assert r["n_shards"] == tp, \
+            f"tp={tp}: pool must expose one buffer per shard"
+    assert res[1]["outputs"] == base["outputs"], \
+        "mesh-placed tp=1 must be bit-identical to the meshless engine"
+    out["tokens_mismatch_tp1"] = 0.0
+    for tp in (2, 4):
+        mism = sum(1 for a, b in zip(res[tp]["outputs"], base["outputs"])
+                   if a != b)
+        assert mism == 0, \
+            f"tp={tp} token streams diverged from the tp=1 oracle " \
+            f"({mism}/{len(base['outputs'])} requests)"
+        out[f"tokens_mismatch_tp{tp}"] = float(mism)
+    out["tp_speedup_2"] = (out["wall_per_token_tp1_ms"]
+                           / out["wall_per_token_tp2_ms"])
+
+    cl = _cluster_drain(model, params, cfg)
+    assert cl["finished"] == cl["submitted"], \
+        f"cluster drain lost requests ({cl['finished']}/{cl['submitted']})"
+    out["cluster_unfinished"] = float(cl["submitted"] - cl["finished"])
+    out["cluster_unused_instances"] = float(2 - cl["instances_used"])
+    return out
+
+
+def run(quick: bool = True) -> List[Row]:
+    import jax
+    if jax.device_count() < 4:
+        # the generic figure driver runs without the forced-device flag;
+        # the dedicated multi-device CI job owns this benchmark
+        return [("shard_scale.skipped", float("nan"),
+                 f"needs >= 4 devices, have {jax.device_count()}")]
+    m = measure(smoke=quick)
+    return [
+        row(f"shard_scale.tp{tp}", m[f"wall_per_token_tp{tp}_ms"] * 1e-3,
+            f"{m[f'dispatches_per_iteration_tp{tp}']:.2f} dispatches/iter, "
+            f"{m[f'pool_bytes_copied_per_iter_tp{tp}']:.0f} pool B/iter")
+        for tp in TP_DEGREES
+    ] + [
+        row("shard_scale.headline", m["wall_per_token_tp2_ms"] * 1e-3,
+            f"tokens bit-identical tp2/tp4 vs tp1; cluster 2x2 drained"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for the CI smoke job")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH JSON (schema: benchmarks/common.py)")
+    args = ap.parse_args()
+
+    m = measure(smoke=args.smoke)
+    config = m.pop("config")
+    print("name,value")
+    for k, v in sorted(m.items()):
+        print(f"{k},{v:.4f}")
+    if args.json:
+        write_bench_json(args.json, "shard_scale", config, m)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,11 +20,18 @@ def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarr
     return out.astype(dt)
 
 
-def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray) -> jnp.ndarray:
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray,
+           preferred_element_type=None) -> jnp.ndarray:
+    """``preferred_element_type`` widens the down-projection accumulator:
+    a tensor-parallel caller whose ``w_down`` is row-sharded requests
+    fp32 partial sums so the cross-shard psum rounds to the activation
+    dtype ONCE, after the full contraction (matching the single-device
+    rounding point)."""
     g = jnp.einsum("...d,df->...f", x, w_gate)
     u = jnp.einsum("...d,df->...f", x, w_up)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    return jnp.einsum("...f,fd->...d", h, w_down)
+    return jnp.einsum("...f,fd->...d", h, w_down,
+                      preferred_element_type=preferred_element_type)
 
 
 def init_ffn(key, d_model: int, d_ff: int, dtype) -> dict:

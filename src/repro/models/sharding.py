@@ -195,6 +195,61 @@ def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, cache_shape) 
     return specs
 
 
+# --------------------------------------------------------------------------- #
+# serving (paged-engine) rules
+# --------------------------------------------------------------------------- #
+
+# Paged KV pool (L, 2, num_blocks, block_size, n_kv, hd): shard the
+# KV-head dim over "model" — the pool's logical shape is unchanged, the
+# BlockManager stays head-agnostic (block ids address whole cross-shard
+# pages), and each tensor-parallel shard holds exactly the head slice
+# its megatron-sharded K/V projections produce.
+POOL_PSPEC = P(None, None, None, None, "model", None)
+
+
+def serving_param_specs(params, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec tree for the paged serving engine's params.
+
+    The scanned layer stack gets the megatron rules from
+    :func:`param_pspec` (QKV/O and FFN column/row-sharded over "model",
+    so the only per-layer collectives are the two standard all-reduces).
+    Embeddings / LM head / final norm are REPLICATED: the serving head
+    is argmax-only, and a vocab-sharded head would trade the (tiny)
+    replicated-weight memory for a per-iteration vocab collective on
+    the hot path.
+    """
+    def one(path, leaf):
+        keys = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in path)
+        keys = tuple(str(k) for k in keys if k is not None)
+        if "layers" in keys:
+            return param_pspec(keys, leaf, cfg, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def validate_serving_tp(cfg: ModelConfig, tp: int) -> None:
+    """Raise unless a ``tp``-way megatron shard of this config is exact.
+
+    The shard_map'd engine step assumes every sharded dim divides: a
+    silently-replicated weight (param_pspec's GSPMD fallback) would make
+    the per-layer psum double-count that block's contribution.
+    """
+    if tp <= 1:
+        return
+    if cfg.num_kv_heads % tp or cfg.num_heads % tp:
+        raise ValueError(
+            f"model_parallel={tp} must divide num_heads={cfg.num_heads} "
+            f"and num_kv_heads={cfg.num_kv_heads} ({cfg.name})")
+    if cfg.d_ff % tp:
+        raise ValueError(
+            f"model_parallel={tp} must divide d_ff={cfg.d_ff} ({cfg.name})")
+    if cfg.moe is not None:
+        raise ValueError(
+            "tensor-parallel paged serving of MoE archs is not supported "
+            "(expert-parallel serving: see ROADMAP)")
+
+
 def should_fsdp(cfg: ModelConfig, kind: str) -> bool:
     """Shard weights over the `data` axis as well (FSDP-style).
 

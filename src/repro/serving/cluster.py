@@ -135,6 +135,49 @@ class ServingCluster:
             lambda iid, req: self._by_id[iid].submit(req),
             tracer=tracer)
 
+    # ---------------------------------------------------------------- factories
+    @classmethod
+    def on_mesh_slices(cls, model, params, orchestrator, *,
+                       n_instances: int, model_parallel: int = 1,
+                       devices=None, runner_kwargs: Optional[dict] = None,
+                       engine_kwargs: Optional[dict] = None,
+                       tracer: Tracer = NULL_TRACER, **cluster_kwargs
+                       ) -> "ServingCluster":
+        """Place ``n_instances`` engines on disjoint mesh slices.
+
+        The production topology: data-parallel instances × tensor-
+        parallel shards.  Carves the local devices (or ``devices``) into
+        ``n_instances`` disjoint groups of ``model_parallel`` devices
+        via :func:`repro.launch.mesh.make_slice_meshes` and builds one
+        :class:`PagedModelRunner` per slice — each instance's KV pool
+        and megatron-sharded params live only on its own devices, so
+        instances never contend for a device and the donated-pool
+        aliasing invariant holds per slice.  ``model_parallel=1``
+        degenerates to plain single-device data parallelism (one device
+        per instance), bit-identical to the unsharded engine.
+
+        Engines get ``instance_id`` 0..N-1 and share ``tracer``; runner
+        construction kwargs (``num_blocks``, ``block_size``, ...) go in
+        ``runner_kwargs``, per-engine kwargs (``max_batch``,
+        ``enable_prefix_cache``, ...) in ``engine_kwargs``, and the
+        rest (``dispatcher``, ``pipelined``, ...) to the cluster
+        constructor.  Compiled fns are NOT shared across slices (each
+        slice's executables bind to its own device set) — same-slice
+        scale-out still uses :meth:`PagedModelRunner.clone`.
+        """
+        from repro.launch.mesh import make_slice_meshes
+        from repro.serving.engine import PagedModelRunner
+
+        meshes = make_slice_meshes(n_instances, model_parallel,
+                                   devices=devices)
+        engines = []
+        for i, mesh in enumerate(meshes):
+            runner = PagedModelRunner(model, params, mesh=mesh,
+                                      **(runner_kwargs or {}))
+            engines.append(LLMEngine(runner, instance_id=i, tracer=tracer,
+                                     **(engine_kwargs or {})))
+        return cls(engines, orchestrator, tracer=tracer, **cluster_kwargs)
+
     # ------------------------------------------------------------------ intake
     def submit(self, req: Request):
         """Enqueue at the load balancer; the next step dispatches it."""

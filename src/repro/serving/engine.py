@@ -11,12 +11,16 @@ KV memory in use / capacity, running/waiting counts, preemption counter.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import time
 from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.scheduler import SchedulerPolicy
 from repro.kernels import ops as kops
@@ -26,6 +30,11 @@ from repro.models import attention as attn_mod
 from repro.models.layers import embed_tokens, lm_logits, rms_norm, swiglu
 from repro.models.model import LanguageModel
 from repro.models.moe import moe_ffn
+from repro.models.sharding import (
+    POOL_PSPEC,
+    serving_param_specs,
+    validate_serving_tp,
+)
 from repro.serving.batch_scheduler import (
     BatchScheduler,
     IterationBatch,
@@ -52,13 +61,35 @@ def _layer_qkv(lp, xx, sin, cos, cfg):
     return attn_mod.apply_rope(q, sin, cos), attn_mod.apply_rope(k, sin, cos), v
 
 
-def _layer_finish(xx, o, lp, cfg):
+def _layer_finish(xx, o, lp, cfg, axis: Optional[str] = None):
     """Shared transformer-layer tail: attention output projection and the
-    FFN/MoE block, both residual.  ``o`` is (B, S, H*hd)."""
-    xx = xx + jnp.einsum("bse,ed->bsd", o, lp["attn"]["wo"])
+    FFN/MoE block, both residual.  ``o`` is (B, S, H*hd).
+
+    ``axis`` names the tensor-parallel mesh axis when this body runs
+    inside shard_map: ``o`` then holds the LOCAL head slice and ``wo``
+    the matching row slice, so the projection yields a partial sum —
+    the all-reduce here, plus the matching one after the row-sharded
+    FFN down-projection, are the standard two megatron collectives per
+    layer (the only ones on the sharded hot path).  Both partial sums
+    are accumulated and psum'd in fp32, rounding to the activation
+    dtype once AFTER the full contraction — the same rounding point as
+    the unsharded einsum, which is what keeps tp>1 token streams
+    bit-identical to the tp=1 differential baseline in bf16."""
+    if axis is not None:
+        attn_out = jnp.einsum("bse,ed->bsd", o, lp["attn"]["wo"],
+                              preferred_element_type=jnp.float32)
+        attn_out = jax.lax.psum(attn_out, axis).astype(xx.dtype)
+    else:
+        attn_out = jnp.einsum("bse,ed->bsd", o, lp["attn"]["wo"])
+    xx = xx + attn_out
     h2 = rms_norm(xx, lp["ln2"], cfg.norm_eps)
     if "moe" in lp:
         f, _ = moe_ffn(lp["moe"], h2, cfg)
+        if axis is not None:
+            f = jax.lax.psum(f, axis)
+    elif axis is not None:
+        f = swiglu(h2, **lp["ffn"], preferred_element_type=jnp.float32)
+        f = jax.lax.psum(f, axis).astype(xx.dtype)
     else:
         f = swiglu(h2, **lp["ffn"])
     return xx + f
@@ -91,26 +122,72 @@ class PagedModelRunner:
     segment-bounded oracle ("ref"), or the legacy flatten-and-repeat
     lowering onto the decode kernel ("flat"/"flat_interpret"/"flat_ref",
     kept for differential tests).  Defaults to ``backend``.
+
+    **Tensor parallelism** (``mesh``): given a ("data", "model") mesh
+    slice, the runner shards megatron-style over the "model" axis —
+    QKV/O and FFN weights per ``models.sharding.param_pspec``, the KV
+    pool over KV heads (``POOL_PSPEC``; logical pool shape unchanged,
+    the BlockManager stays head-agnostic) — and lowers every step
+    function through ``shard_map``.  Each shard runs the SAME fused
+    iteration body on its local KV-head slice (the attention kernels'
+    kv_head grid dim is simply the local head count; block tables and
+    ragged metadata are replicated), and the only collectives per layer
+    are the two standard megatron all-reduces.  Donation survives
+    sharding: jit aliases the pool shard-for-shard, so each device
+    keeps ONE resident pool shard for the runner's lifetime
+    (``pool_address()`` returns the per-shard address tuple).  A
+    ``mesh`` whose "model" axis is 1 only *places* the arrays on that
+    slice's device — the computation is the exact single-device
+    baseline, which is what keeps tp=1 bit-identical for differential
+    tests.
     """
 
     def __init__(self, model: LanguageModel, params, num_blocks: int,
                  block_size: int, max_batch: int = 8,
                  backend: Optional[str] = None,
                  ragged_backend: Optional[str] = None,
-                 donate_pool: bool = True):
+                 donate_pool: bool = True,
+                 mesh: Optional[Mesh] = None):
         cfg = model.cfg
         assert model.uniform_kind == "attn", "paged runner serves attention archs"
         assert cfg.sliding_window is None, "windowed paged decode: see DESIGN.md"
-        self.model, self.cfg, self.params = model, cfg, params
+        self.model, self.cfg = model, cfg
         self.block_size, self.num_blocks = block_size, num_blocks
         self.max_batch = max_batch
         self.backend = backend or kops.default_backend()
         self.ragged_backend = ragged_backend or self.backend
         self.donate_pool = donate_pool
+        # ---- tensor-parallel mesh placement (tp=1 + mesh=None is the
+        # exact single-device baseline: no shard_map, no collectives) ----
+        self.mesh = mesh
+        tp = (int(mesh.shape["model"])
+              if mesh is not None and "model" in mesh.axis_names else 1)
+        validate_serving_tp(cfg, tp)
+        self.tp = tp
+        self._tp_axis = "model" if tp > 1 else None
         hd = cfg.resolved_head_dim
-        self.pool = jnp.zeros(
-            (cfg.num_layers, 2, num_blocks, block_size, cfg.num_kv_heads, hd),
-            model.dtype)
+        # local (per-shard) config: the step bodies reshape activations
+        # by head counts, and under shard_map each shard owns 1/tp of
+        # the KV heads plus their whole query-head groups (heads are
+        # laid out group-contiguous, so the megatron column slice of
+        # wq/wk/wv is exactly a KV-head-aligned slice).  head_dim is
+        # pinned so resolved_head_dim can't drift with num_heads.
+        self._lcfg = (dataclasses.replace(
+            cfg, num_heads=cfg.num_heads // tp,
+            num_kv_heads=cfg.num_kv_heads // tp, head_dim=hd)
+            if tp > 1 else cfg)
+        self._pool_pspec = POOL_PSPEC if tp > 1 else P()
+        if mesh is not None:
+            specs = (serving_param_specs(params, cfg, mesh)
+                     if tp > 1 else jax.tree_util.tree_map(lambda _: P(),
+                                                           params))
+            self._param_specs = specs
+            params = jax.device_put(params, jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), specs))
+        else:
+            self._param_specs = None
+        self.params = params
+        self.pool = self._new_pool()
         # perf counters now live on a metrics registry (obs.metrics);
         # n_dispatches is a property alias over it — device *op
         # dispatches* issued (jitted calls plus standalone ops like the
@@ -120,15 +197,68 @@ class PagedModelRunner:
         # and are not counted on either path.
         self.metrics = MetricsRegistry()
         self.n_dispatches = 0
-        self._decode_fn = self._jit_pool(self._build_decode())
+        if self._tp_axis is None:
+            decode = self._build_decode()
+            fused = self._build_fused()
+            suffix = self._build_suffix_prefill()
+            copy = self._build_copy_block()
+        else:
+            # lower every step body through shard_map: params enter with
+            # their megatron specs, the pool with its KV-head shard, the
+            # ragged batch metadata (tokens / positions / block tables /
+            # scalar-prefetched scatter slots) replicated.  Outputs:
+            # next-token ids are replicated (each shard computes the
+            # identical argmax from the psum'ed activations and the
+            # replicated LM head), the pool keeps its shard spec so jit
+            # donation aliases shard-for-shard.
+            rep = P()
+            ppar, pspec = self._param_specs, self._pool_pspec
+            decode = self._smap(self._build_decode(),
+                                (ppar, pspec) + (rep,) * 4, (rep, pspec))
+            fused = self._smap(self._build_fused(),
+                               (ppar, pspec) + (rep,) * 10, (rep, pspec))
+            copy = self._smap(self._build_copy_block(),
+                              (pspec, rep, rep), pspec)
+            raw_suffix = self._build_suffix_prefill()
+            smap = self._smap
+
+            def suffix(params, pool, tokens, ctx_bt, write_idx, n_cached):
+                # n_cached is a static python int (jit static_argnames),
+                # consumed by slicing inside the body — bind it BEFORE
+                # shard_map so it never becomes a traced spec'd operand;
+                # each n_cached specialization re-wraps at trace time.
+                fn = smap(functools.partial(raw_suffix, n_cached=n_cached),
+                          (ppar, pspec, rep, rep, rep), (rep, pspec))
+                return fn(params, pool, tokens, ctx_bt, write_idx)
+        self._decode_fn = self._jit_pool(decode)
         self._prefill_fn = jax.jit(self.model.prefill)
-        self._suffix_fn = self._jit_pool(self._build_suffix_prefill(),
+        self._suffix_fn = self._jit_pool(suffix,
                                          static_argnames=("n_cached",))
-        self._fused_fn = self._jit_pool(self._build_fused())
+        self._fused_fn = self._jit_pool(fused)
         self._scatter_fn = self._jit_pool(self._build_scatter_prefill(),
                                           pool_argnum=0)
-        self._copy_block_fn = self._jit_pool(self._build_copy_block(),
-                                             pool_argnum=0)
+        self._copy_block_fn = self._jit_pool(copy, pool_argnum=0)
+
+    def _new_pool(self) -> jnp.ndarray:
+        """Fresh zeroed KV pool, placed on this runner's mesh slice with
+        the KV-head shard spec (or the default device when meshless)."""
+        cfg = self.cfg
+        pool = jnp.zeros(
+            (cfg.num_layers, 2, self.num_blocks, self.block_size,
+             cfg.num_kv_heads, cfg.resolved_head_dim), self.model.dtype)
+        if self.mesh is not None:
+            pool = jax.device_put(pool,
+                                  NamedSharding(self.mesh, self._pool_pspec))
+        return pool
+
+    def _smap(self, fn, in_specs, out_specs):
+        """shard_map a step body over this runner's mesh slice.
+        check_rep=False: the Pallas/interpret attention backends defeat
+        replication inference, and every replicated output here is
+        replicated by construction (psum'ed activations x replicated
+        head)."""
+        return shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
 
     @property
     def n_dispatches(self) -> int:
@@ -165,8 +295,17 @@ class PagedModelRunner:
         on an in-flight dispatch — call between synced iterations only.
         Only a *missing* API degrades to None: a RuntimeError (e.g. a
         deleted buffer — a stale reference surviving past its donation)
-        must propagate, not masquerade as an unsupported probe."""
+        must propagate, not masquerade as an unsupported probe.
+
+        A sharded pool returns a TUPLE of per-shard addresses (one per
+        addressable shard, shard-index order): donation under shard_map
+        aliases shard-for-shard, so EVERY position must be stable across
+        dispatches — the sharded perf tests and ``benchmarks/shard_scale``
+        compare whole tuples."""
         try:
+            shards = self.pool.addressable_shards
+            if len(shards) > 1:
+                return tuple(s.data.unsafe_buffer_pointer() for s in shards)
             return self.pool.unsafe_buffer_pointer()
         except (AttributeError, NotImplementedError):
             return None
@@ -187,7 +326,15 @@ class PagedModelRunner:
         Two dispatches: the model prefill and the (donated) pool scatter
         — the scatter used to be an out-of-jit ``at[].set`` that copied
         the entire pool to write one prompt's pages, and was not counted
-        in ``n_dispatches`` at all."""
+        in ``n_dispatches`` at all.
+
+        Tensor-parallel runners route through the shard_map'd suffix
+        path with ``n_cached=0`` instead: the monolithic ``model.prefill``
+        produces full-head contiguous KV, which has no per-shard scatter
+        (tp=1 keeps the exact legacy two-dispatch lowering as the
+        differential baseline)."""
+        if self.tp > 1:
+            return self.prefill_suffix(tokens, block_table, 0)
         nb = -(-tokens.shape[0] // self.block_size)
         self.n_dispatches += 2
         logits, cache = self._prefill_fn(self.params, tokens[None])
@@ -249,7 +396,8 @@ class PagedModelRunner:
         return copy
 
     def _build_suffix_prefill(self):
-        cfg = self.cfg
+        cfg = self._lcfg
+        axis = self._tp_axis
         hd = cfg.resolved_head_dim
 
         def step(params, pool, tokens, ctx_bt, write_idx, n_cached):
@@ -276,7 +424,7 @@ class PagedModelRunner:
                 scores = attn_mod._gqa_scores(q, kf)
                 probs = jax.nn.softmax(scores + bias, axis=-1)
                 o = attn_mod._gqa_out(probs, vf).reshape(1, s, -1)
-                return _layer_finish(xx, o, lp, cfg), \
+                return _layer_finish(xx, o, lp, cfg, axis), \
                     jnp.stack([k[0], v[0]])                   # (2, S, kv, hd)
 
             x, kvs = jax.lax.scan(body, x, (params["layers"], pool))
@@ -319,7 +467,8 @@ class PagedModelRunner:
         return nxt
 
     def _build_fused(self):
-        cfg = self.cfg
+        cfg = self._lcfg
+        axis = self._tp_axis
         hd = cfg.resolved_head_dim
         backend = self.backend
         ragged_backend = self.ragged_backend
@@ -368,7 +517,7 @@ class PagedModelRunner:
                 o = jnp.concatenate(
                     [op.reshape(tp, cfg.num_kv_heads, g, hd), od])
                 o = o.reshape(1, -1, cfg.num_heads * hd)
-                return _layer_finish(xx, o, lp, cfg), jnp.stack([kp, vp])
+                return _layer_finish(xx, o, lp, cfg, axis), jnp.stack([kp, vp])
 
             x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
             x = rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -380,7 +529,8 @@ class PagedModelRunner:
 
     # -- batched paged decode --------------------------------------------------
     def _build_decode(self):
-        cfg = self.cfg
+        cfg = self._lcfg
+        axis = self._tp_axis
         hd = cfg.resolved_head_dim
         bs = self.block_size
         backend = self.backend
@@ -408,7 +558,7 @@ class PagedModelRunner:
                 qg = q.reshape(q.shape[0], cfg.num_kv_heads, g, hd)
                 o = kops.paged_attention(qg, kp, vp, block_tables, ctx, backend=backend)
                 o = o.reshape(q.shape[0], 1, cfg.num_heads * hd)
-                return _layer_finish(xx, o, lp, cfg), jnp.stack([kp, vp])
+                return _layer_finish(xx, o, lp, cfg, axis), jnp.stack([kp, vp])
 
             x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
             x = rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -441,14 +591,26 @@ class PagedModelRunner:
         donates each caller's pool independently).  The fresh pool is
         built from static shape/dtype, never by reading the source
         runner's buffer — cloning is legal even while the source has a
-        dispatch in flight."""
+        dispatch in flight.
+
+        Sharded runners clone the same way WITHIN a mesh slice: the
+        clone shares the placed (sharded) params and the compiled
+        shard_map'd step fns — compiled executables close over the
+        slice's device set, so same-slice instances pay one compile.  A
+        runner for a DIFFERENT slice cannot be cloned (its executables
+        are bound to other devices); build it with
+        ``PagedModelRunner(..., mesh=other_slice)`` instead."""
         c = object.__new__(PagedModelRunner)
         c.model, c.cfg, c.params = self.model, self.cfg, self.params
         c.block_size, c.num_blocks = self.block_size, self.num_blocks
         c.max_batch, c.backend = self.max_batch, self.backend
         c.ragged_backend = self.ragged_backend
         c.donate_pool = self.donate_pool
-        c.pool = jnp.zeros(self.pool.shape, self.pool.dtype)
+        c.mesh, c.tp = self.mesh, self.tp
+        c._tp_axis, c._lcfg = self._tp_axis, self._lcfg
+        c._pool_pspec = self._pool_pspec
+        c._param_specs = self._param_specs
+        c.pool = c._new_pool()
         c.metrics = MetricsRegistry()
         c.n_dispatches = 0
         c._decode_fn = self._decode_fn

@@ -74,18 +74,43 @@ class CostModel:
     #                                32 layers x 2 x 8 kv heads x 128 hd x 2B)
     hbm_gbps: float = 800.0        # device memory bandwidth (GB/s) pricing
     #                                non-donated pool-copy traffic
+    # --- tensor parallelism (sharded instances) ---------------------------
+    # The sharded engine's only per-layer collectives are the two megatron
+    # all-reduces, each moving one activation row (d_model x dtype bytes)
+    # per token per layer over the interconnect.  A ring all-reduce over
+    # tp shards moves 2*(tp-1)/tp of the payload per link.
+    num_layers: int = 32
+    allreduce_bytes_per_token_layer: int = 16384  # 2 psums x d_model=4096 x 2B
+    ici_gbps: float = 100.0        # per-link interconnect bandwidth (GB/s)
 
     def iteration_time(self, n_decode: int, prefill_tokens: int,
                        cached_tokens: int = 0,
                        n_prefill_seqs: int = 0,
                        fused: bool = False,
-                       hbm_bytes: int = 0) -> float:
+                       hbm_bytes: int = 0,
+                       tp_degree: int = 1) -> float:
+        """``tp_degree`` > 1 models a megatron-sharded instance: the
+        compute terms divide across shards (each holds 1/tp of heads and
+        d_ff) while ``t_base`` — dispatch/launch overhead — does not,
+        and a per-token-per-layer ring all-reduce term is added.  At the
+        default ``tp_degree=1`` the collective term is exactly 0 and
+        every compute term divides by 1, so all pre-sharding trajectories
+        and committed BENCH baselines are numerically unchanged."""
         seg = (self.beta_seg_fused if fused else self.beta_prefill) \
             * n_prefill_seqs
-        return (self.t_base + self.beta * n_decode
-                + self.gamma * prefill_tokens
-                + self.gamma_cached * cached_tokens
-                + seg + hbm_bytes / (self.hbm_gbps * 1e9))
+        tp = max(1, tp_degree)
+        coll = 0.0
+        if tp > 1:
+            tokens = n_decode + prefill_tokens
+            coll = (tokens * self.num_layers
+                    * self.allreduce_bytes_per_token_layer
+                    * 2 * (tp - 1) / tp) / (self.ici_gbps * 1e9)
+        return (self.t_base
+                + (self.beta * n_decode
+                   + self.gamma * prefill_tokens
+                   + self.gamma_cached * cached_tokens
+                   + seg) / tp
+                + coll + hbm_bytes / (self.hbm_gbps * 1e9))
 
     def pool_bytes(self, kv_capacity_tokens: int) -> int:
         """Resident KV-pool size of an instance with the given capacity —
@@ -105,6 +130,7 @@ LLAMA3_8B = CostModel("llama3-8b")
 LLAMA2_13B = CostModel("llama2-13b", t_base=0.013, beta=0.0021, gamma=0.00026,
                        gamma_cached=0.000013, beta_prefill=0.0007,
                        beta_seg_fused=0.00014, kv_bytes_per_token=1638400,
-                       hbm_gbps=800.0)
+                       hbm_gbps=800.0, num_layers=40,
+                       allreduce_bytes_per_token_layer=20480)
 
 COST_MODELS = {m.name: m for m in (LLAMA3_8B, LLAMA2_13B)}

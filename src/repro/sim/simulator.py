@@ -71,13 +71,17 @@ class SimInstance:
                  fused_iteration: bool = True,
                  donate_pool: bool = True,
                  ragged_native: bool = True,
+                 tp_degree: int = 1,
                  tracer: Tracer = NULL_TRACER):
         self.instance_id = instance_id
         self.cost = cost
         self.fused_iteration = fused_iteration
         self.donate_pool = donate_pool
         self.ragged_native = ragged_native
-        self.pool_bytes = cost.pool_bytes(kv_capacity_tokens)
+        self.tp_degree = tp_degree
+        # the KV pool (and thus any pool-copy / re-gather HBM traffic) is
+        # sharded over kv heads: each shard moves 1/tp of the bytes
+        self.pool_bytes = cost.pool_bytes(kv_capacity_tokens) // max(1, tp_degree)
         self.bm = BlockManager(kv_capacity_tokens // block_size, block_size)
         self.cache = PrefixCache(block_size) if prefix_caching else None
         self.busy = False
@@ -156,7 +160,8 @@ class SimInstance:
                                  for c in plan.chunks), TABLE_BUCKET_FLOOR)
             extra_rows = sum(
                 (c.end - c.start) * nbp * bs - c.end for c in plan.chunks)
-            hbm_bytes += extra_rows * self.cost.kv_bytes_per_token
+            hbm_bytes += extra_rows * self.cost.kv_bytes_per_token \
+                // max(1, self.tp_degree)
         if not self.donate_pool:
             # every pool-threading dispatch materializes a second pool
             # buffer (full read + write): 1 for the fused path, one per
@@ -167,7 +172,7 @@ class SimInstance:
         dt = self.cost.iteration_time(
             len(plan.decode), plan.prefill_tokens, plan.context_tokens,
             n_prefill_seqs=len(plan.chunks), fused=self.fused_iteration,
-            hbm_bytes=hbm_bytes)
+            hbm_bytes=hbm_bytes, tp_degree=self.tp_degree)
         finished = []
         traced = self.tracer.enabled
         for r in plan.decode:
@@ -232,6 +237,11 @@ class SimConfig:
     # its own context); False prices the flatten-and-repeat lowering,
     # which re-reads the batch-padded table width per chunk
     ragged_native: bool = True
+    # tensor-parallel degree of each instance: compute terms and KV/HBM
+    # traffic divide across shards, plus the per-layer ring all-reduce
+    # term (CostModel).  Default 1 = unsharded, collective term exactly
+    # 0 — every pre-sharding trajectory and BENCH baseline is unchanged
+    tp_degree: int = 1
     # observability: thread one obs.Tracer through the whole sim control
     # plane + instances, emitting the SAME event schema as the real
     # engine path with simulated timestamps (sim-vs-real breakdowns
@@ -321,6 +331,7 @@ class Simulation:
                         fused_iteration=cfg.fused_iteration,
                         donate_pool=cfg.donate_pool,
                         ragged_native=cfg.ragged_native,
+                        tp_degree=cfg.tp_degree,
                         tracer=self.tracer)
             for i in range(cfg.n_instances)]
         self.balancer = LoadBalancer(

@@ -1,0 +1,222 @@
+"""Tensor-parallel paged engine: mesh validation + sharded-vs-single
+differential drains.
+
+Mesh/spec validation runs on any device count.  The differential drains
+need >= 4 local devices (the multi-device CI job forces 8 with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and pin:
+
+* full traced drain (prefix cache + chunked prefill + preemption
+  pressure) token-bit-identical at tp=2 and tp=4 vs the tp=1 oracle —
+  fp32 model, where the engine's fp32-accumulated psums leave summation
+  order as the only sharded-vs-unsharded difference,
+* obs event streams and counter metrics identical between the tp=2 and
+  tp=1 drains (same scheduling decisions, same token streams),
+* per-shard pool buffer addresses stable across the whole drain
+  (donation survives sharding: one resident sharded buffer),
+* ``clone()`` shares every compiled step fn but owns a fresh pool,
+* ``ServingCluster.on_mesh_slices`` places instances on disjoint
+  devices and its metrics carry the ``engine{i}.`` prefixes.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh, make_slice_meshes
+from repro.models import build_model
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices (XLA_FLAGS=--xla_force_host_platform_device_count)")
+
+
+# =============================================================================
+# mesh construction validation (any device count)
+# =============================================================================
+
+
+def test_make_local_mesh_rejects_bad_model_parallel():
+    devs = jax.devices()[:1]
+    with pytest.raises(ValueError, match="must be >= 1"):
+        make_local_mesh(0, devices=devs)
+    with pytest.raises(ValueError, match="does not divide"):
+        make_local_mesh(2, devices=devs)
+    m = make_local_mesh(1, devices=devs)
+    assert m.axis_names == ("data", "model") and m.shape["model"] == 1
+
+
+def test_make_slice_meshes_rejects_insufficient_devices():
+    devs = jax.devices()[:1]
+    with pytest.raises(ValueError, match="needs 2 devices"):
+        make_slice_meshes(2, 1, devices=devs)
+    with pytest.raises(ValueError, match="n_slices"):
+        make_slice_meshes(0, 1, devices=devs)
+    (m,) = make_slice_meshes(1, 1, devices=devs)
+    assert m.shape["model"] == 1
+
+
+@multi_device
+def test_slice_meshes_are_disjoint():
+    meshes = make_slice_meshes(2, 2, devices=jax.devices()[:4])
+    sets = [set(d.id for d in m.devices.flat) for m in meshes]
+    assert sets[0].isdisjoint(sets[1])
+    assert all(len(s) == 2 for s in sets)
+
+
+# =============================================================================
+# sharded runner construction + differential drains
+# =============================================================================
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    # reduced qwen3 widened so 4-way TP divides; fp32 for the exact
+    # differential (bf16 psum reassociation can flip argmax near-ties)
+    cfg = get_config("qwen3-1.7b").reduced()
+    cfg = dataclasses.replace(cfg, num_heads=8, num_kv_heads=4,
+                              head_dim=64, dtype="float32")
+    model = build_model(cfg)
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _reqs(n=6, max_new=5):
+    from repro.serving import Request
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, 500, 16).astype(np.int32)
+    out = []
+    for i in range(n):
+        toks = np.concatenate(
+            [prefix, rng.integers(0, 500, 5 + i).astype(np.int32)])
+        out.append(Request(agent_name=f"a{i % 2}", msg_id=f"m{i}",
+                           prompt_len=len(toks), prompt_tokens=toks,
+                           max_new_tokens=max_new, arrival_time=float(i)))
+    return out
+
+
+def _drain(model_and_params, tp, num_blocks=9, tracer=None):
+    """One engine, prefix cache + chunked prefill; num_blocks=9 is
+    preemption pressure for this mix (asserted below).  Returns
+    (sorted token streams, engine, per-shard address stability)."""
+    from repro.obs.trace import NULL_TRACER
+    from repro.serving import LLMEngine, PagedModelRunner, reset_request_ids
+    model, params = model_and_params
+    mesh = make_local_mesh(tp, devices=jax.devices()[:tp]) if tp else None
+    runner = PagedModelRunner(model, params, num_blocks=num_blocks,
+                              block_size=8, max_batch=4, mesh=mesh)
+    eng = LLMEngine(runner, max_batch=4, enable_prefix_cache=True,
+                    prefill_chunk_tokens=8,
+                    tracer=tracer or NULL_TRACER)
+    reset_request_ids()
+    pending = _reqs()
+    done = []
+    addr0 = runner.pool_address()
+    stable = True
+    for _ in range(4000):
+        if pending:
+            eng.submit(pending.pop(0))
+        done.extend(eng.step())
+        if runner.pool_address() != addr0:
+            stable = False
+        if not pending and not eng.running and not eng.waiting:
+            break
+    assert len(done) == 6
+    return (sorted((r.msg_id, tuple(int(t) for t in r.output_tokens))
+                   for r in done), eng, stable)
+
+
+_COUNTERS = ("n_finished", "n_admitted", "n_preempted", "prefill_tokens",
+             "prefill_tokens_saved", "n_dispatches", "pool_bytes",
+             "prefix_cache_hit_rate")
+
+
+@multi_device
+def test_sharded_drain_token_identity_events_and_metrics(model_and_params):
+    from repro.obs.trace import Tracer
+    tr1, tr2 = Tracer(), Tracer()
+    out1, eng1, stable1 = _drain(model_and_params, None, tracer=tr1)
+    out2, eng2, stable2 = _drain(model_and_params, 2, tracer=tr2)
+    out4, eng4, stable4 = _drain(model_and_params, 4)
+
+    assert out2 == out1, "tp=2 tokens must be bit-identical to tp=1"
+    assert out4 == out1, "tp=4 tokens must be bit-identical to tp=1"
+    assert eng1.stats.n_preempted > 0, \
+        "workload must actually exercise preemption pressure"
+
+    # identical scheduling -> identical event streams (timestamps aside)
+    ev1 = [(e.kind, e.req_id, e.instance_id) for e in tr1.events()]
+    ev2 = [(e.kind, e.req_id, e.instance_id) for e in tr2.events()]
+    assert ev1 == ev2
+
+    m1, m2 = eng1.metrics_snapshot(), eng2.metrics_snapshot()
+    assert set(m1) == set(m2)
+    for k in _COUNTERS:
+        assert m1[k] == m2[k], f"counter {k}: tp1={m1[k]} tp2={m2[k]}"
+
+    # donation survives sharding: every shard's buffer address stable
+    assert stable1 and stable2 and stable4
+    addr = eng2.runner.pool_address()
+    assert isinstance(addr, tuple) and len(addr) == 2, \
+        "sharded pool must witness one buffer address per shard"
+
+
+@multi_device
+def test_sharded_runner_validates_config(model_and_params):
+    from repro.serving import PagedModelRunner
+    mesh = make_local_mesh(4, devices=jax.devices()[:4])
+    cfg = get_config("qwen3-1.7b").reduced()      # 2 kv heads: 4 won't divide
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="num_heads|num_kv_heads"):
+        PagedModelRunner(model, params, num_blocks=8, block_size=8,
+                         max_batch=2, mesh=mesh)
+
+
+@multi_device
+def test_sharded_clone_shares_fns_owns_pool(model_and_params):
+    from repro.serving import PagedModelRunner
+    model, params = model_and_params
+    mesh = make_local_mesh(2, devices=jax.devices()[:2])
+    r = PagedModelRunner(model, params, num_blocks=8, block_size=8,
+                         max_batch=2, mesh=mesh)
+    c = r.clone()
+    assert c._fused_fn is r._fused_fn
+    assert c._decode_fn is r._decode_fn
+    assert c._suffix_fn is r._suffix_fn
+    assert c.pool is not r.pool
+    assert c.pool.sharding == r.pool.sharding
+    assert c.pool_address() != r.pool_address()
+
+
+@multi_device
+def test_cluster_on_mesh_slices_disjoint_and_prefixed(model_and_params):
+    from repro.core.orchestrator import HardwareProfile, Orchestrator
+    from repro.serving import ServingCluster, reset_request_ids
+    model, params = model_and_params
+    orch = Orchestrator(hardware=HardwareProfile(
+        decode_tok_per_s=20.0, kv_capacity_tokens=16 * 8))
+    cluster = ServingCluster.on_mesh_slices(
+        model, params, orch, n_instances=2, model_parallel=2,
+        devices=jax.devices()[:4],
+        runner_kwargs=dict(num_blocks=16, block_size=8, max_batch=4),
+        engine_kwargs=dict(max_batch=4, enable_prefix_cache=True,
+                           prefill_chunk_tokens=8))
+    devs = [set(d.id for d in e.runner.mesh.devices.flat)
+            for e in cluster.engines]
+    assert devs[0].isdisjoint(devs[1])
+    reset_request_ids()
+    pending = _reqs(n=8)
+    done = []
+    for _ in range(4000):
+        if pending:
+            cluster.submit(pending.pop(0))
+        done.extend(cluster.step())
+        if not pending and not cluster.has_work:
+            break
+    cluster.close()
+    assert len(done) == 8
+    assert {r.instance_id for r in done} == {0, 1}
+    snap = cluster.metrics_snapshot()
+    assert any(k.startswith("engine0.") for k in snap)
+    assert any(k.startswith("engine1.") for k in snap)
