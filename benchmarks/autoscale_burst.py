@@ -1,0 +1,256 @@
+"""Elastic autoscaling under a bursty trace + live-migration exactness.
+
+Two halves, one BENCH JSON (gated by ``check_regression.py`` under
+``autoscale_burst``):
+
+**A. Migration losslessness (real engines, CI-gated EXACT).**  A mixed
+workload — shared cached prefixes, chunked prefill, decode — drains
+through two real paged engines while every few iterations ALL running
+requests are forcibly live-migrated to the other engine (ping-pong, so
+each request migrates several times, mid-prefill and mid-decode, warm
+and cold target caches).  The drained token streams must be
+bit-identical to an unmigrated single-engine run:
+``migration_tokens_mismatch`` is gated at exactly 0.
+
+**B. Elastic vs fixed capacity (deterministic sim).**  A seeded bursty
+trace (``repro.workloads.traces.bursty_trace``: low baseline + one
+guaranteed heavy burst window) replays through the discrete-event
+simulator three ways — fixed at the trough size, fixed at the burst
+size, and elastic (autoscaler grows/shrinks between the two, retiring
+instances through migration).  Elastic must beat trough-sized fixed
+capacity on p99 workflow token latency (``elastic_vs_fixed_p99_ratio``
+ratio-floor >= 1.0) and hold its goodput under SLO
+(``goodput_slo_elastic`` baseline floor), while paying far fewer
+instance-seconds than burst-sized fixed capacity.
+
+Run: ``PYTHONPATH=src python -m benchmarks.autoscale_burst [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row, row, write_bench_json
+
+MIGRATE_EVERY = 3       # engine iterations between forced ping-pong moves
+# SLO constants calibrated to the smoke trace's latency scale (request
+# e2e p50 ~8-14 s under load): trough-sized fixed capacity misses the
+# deadlines for most burst-window workflows, elastic holds most of them
+SLO_E2E_S = 30.0        # per-request arrival->finish deadline (sim, part B)
+SLO_WF_S = 60.0         # workflow deadline (sim, part B)
+
+
+# =============================================================================
+# part A: forced-migration drain on real engines
+# =============================================================================
+
+
+def _model_and_params():
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _workload(n_reqs: int, max_new: int) -> List:
+    """Shared-prefix requests with varying unique tails: exercises the
+    prefix cache (warm/cold restores), chunked prefill (mid-prefill
+    migrations), and COW-shared blocks."""
+    from repro.serving import Request
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, 500, 16).astype(np.int32)
+    reqs = []
+    for i in range(n_reqs):
+        toks = np.concatenate(
+            [prefix, rng.integers(0, 500, 5 + (i % 9)).astype(np.int32)])
+        reqs.append(Request(
+            agent_name=f"a{i % 3}", msg_id=f"m{i}", prompt_len=len(toks),
+            prompt_tokens=toks, max_new_tokens=max_new,
+            arrival_time=float(i)))
+    return reqs
+
+
+def _baseline_drain(model, params, cfg: Dict) -> Dict[str, List[int]]:
+    from repro.serving import LLMEngine, PagedModelRunner, reset_request_ids
+    reset_request_ids()
+    r = PagedModelRunner(model, params, num_blocks=cfg["num_blocks"],
+                         block_size=8, max_batch=cfg["max_batch"])
+    eng = LLMEngine(r, instance_id=0, max_batch=cfg["max_batch"],
+                    enable_prefix_cache=True, prefill_chunk_tokens=8)
+    pending = _workload(cfg["n_reqs"], cfg["max_new"])
+    done = []
+    for _ in range(100_000):
+        if pending:
+            eng.submit(pending.pop(0))
+        done.extend(eng.step())
+        if not pending and not eng.sched.has_work:
+            break
+    return {q.msg_id: list(q.output_tokens) for q in done}
+
+
+def _migrated_drain(model, params, cfg: Dict) -> Dict:
+    """Drain the same workload through TWO engines, forcibly ping-pong
+    live-migrating every running request every MIGRATE_EVERY iterations."""
+    from repro.serving import (LLMEngine, PagedModelRunner,
+                               migrate, reset_request_ids)
+    reset_request_ids()
+    r0 = PagedModelRunner(model, params, num_blocks=cfg["num_blocks"],
+                          block_size=8, max_batch=cfg["max_batch"])
+    engines = [
+        LLMEngine(r0, instance_id=0, max_batch=cfg["max_batch"],
+                  enable_prefix_cache=True, prefill_chunk_tokens=8),
+        LLMEngine(r0.clone(), instance_id=1, max_batch=cfg["max_batch"],
+                  enable_prefix_cache=True, prefill_chunk_tokens=8)]
+    pending = _workload(cfg["n_reqs"], cfg["max_new"])
+    done, it = [], 0
+    n_migrations = n_mid_prefill = 0
+    migrated_bytes = 0
+    for _ in range(100_000):
+        if pending:
+            engines[it % 2].submit(pending.pop(0))
+        for e in engines:
+            done.extend(e.step())
+        it += 1
+        if it % MIGRATE_EVERY == 0:
+            # engines are synced after step(): migration is legal now.
+            # Move every running request off the busier engine.
+            src = max(engines, key=lambda e: len(e.sched.running))
+            dst = engines[1 - engines.index(src)]
+            for q in list(src.sched.running):
+                if not dst.sched.can_adopt(q):
+                    continue
+                if q.prefilled_len < q.prompt_len:
+                    n_mid_prefill += 1
+                snap = migrate(src, dst, q)
+                n_migrations += 1
+                migrated_bytes += snap.n_bytes
+        if not pending and not any(e.sched.has_work for e in engines):
+            break
+    toks = {q.msg_id: list(q.output_tokens) for q in done}
+    return {"tokens": toks, "n_migrations": n_migrations,
+            "n_mid_prefill": n_mid_prefill, "migrated_bytes": migrated_bytes}
+
+
+def measure_migration(smoke: bool) -> Dict:
+    model, params = _model_and_params()
+    cfg = {"n_reqs": 8 if smoke else 24, "max_new": 10 if smoke else 16,
+           "num_blocks": 64, "max_batch": 4}
+    base = _baseline_drain(model, params, cfg)
+    mig = _migrated_drain(model, params, cfg)
+    assert set(base) == set(mig["tokens"]), "drains finished different sets"
+    mismatch = sum(base[k] != mig["tokens"][k] for k in base)
+    return {
+        "migration_tokens_mismatch": float(mismatch),
+        "migration_unfinished": float(len(base) - len(mig["tokens"])),
+        "n_forced_migrations": float(mig["n_migrations"]),
+        "n_mid_prefill_migrations": float(mig["n_mid_prefill"]),
+        "migrated_mbytes": mig["migrated_bytes"] / 1e6,
+    }
+
+
+# =============================================================================
+# part B: elastic vs fixed on the seeded bursty trace (sim)
+# =============================================================================
+
+
+def _sim(trace, serving, n_instances: int, autoscale=None):
+    from repro.sim.simulator import Simulation
+    cfg = trace.sim_config(serving, n_instances=n_instances,
+                           autoscale=autoscale)
+    return Simulation(cfg).run()
+
+
+def measure_burst(smoke: bool) -> Dict:
+    from repro.obs.slo import SLO, request_samples, slo_report
+    from repro.serving import AutoscalerConfig, ServingConfig
+    from repro.workloads.traces import bursty_trace
+
+    trace = bursty_trace(seed=1, duration=30.0 if smoke else 90.0,
+                         base_rate=2.0 if smoke else 3.0, burst_mult=6.0)
+    serving = ServingConfig(num_blocks=768, block_size=16, max_batch=32,
+                            policy="kairos")
+    lo, hi = 2, 6
+    elastic_cfg = AutoscalerConfig(
+        min_instances=lo, max_instances=hi, queue_high=3.0, queue_low=0.5,
+        kv_high=0.85, kv_low=0.5, up_patience=2, down_patience=8,
+        decision_period_s=0.25, cooldown_s=1.0)
+    slo = SLO(e2e_s=SLO_E2E_S, workflow_deadline_s=SLO_WF_S)
+
+    out: Dict[str, float] = {"trace_n_workflows": float(trace.n_workflows),
+                             "trace_peak_rate": float(
+                                 trace.rate_profile(2.0).max())}
+    runs = {}
+    for name, n, auto in (("fixed_lo", lo, None), ("fixed_hi", hi, None),
+                          ("elastic", lo, elastic_cfg)):
+        res = _sim(trace, serving, n, auto)
+        rep = slo_report(request_samples(res.requests), slo,
+                         duration_s=trace.config.duration)
+        s = res.summary()
+        runs[name] = s
+        out[f"p99_token_latency_{name}"] = s["p99"]
+        out[f"goodput_slo_{name}"] = rep["goodput_slo"]
+        out[f"instance_seconds_{name}"] = s["instance_seconds"]
+        out[f"n_migrated_{name}"] = s["n_migrated"]
+    out["elastic_vs_fixed_p99_ratio"] = (
+        runs["fixed_lo"]["p99"] / max(runs["elastic"]["p99"], 1e-9))
+    out["elastic_capacity_saving_vs_hi"] = (
+        1.0 - out["instance_seconds_elastic"]
+        / max(out["instance_seconds_fixed_hi"], 1e-9))
+    return out
+
+
+# =============================================================================
+# driver
+# =============================================================================
+
+
+def measure(smoke: bool = True) -> Dict:
+    cfg = {"smoke": smoke, "migrate_every": MIGRATE_EVERY,
+           "slo_e2e_s": SLO_E2E_S, "slo_wf_s": SLO_WF_S}
+    t0 = time.time()
+    metrics = {}
+    metrics.update(measure_migration(smoke))
+    metrics.update(measure_burst(smoke))
+    metrics["wall_total_s"] = time.time() - t0
+    return {"config": cfg, "metrics": metrics}
+
+
+def run(quick: bool = True) -> List[Row]:
+    m = measure(smoke=quick)["metrics"]
+    return [
+        row("autoscale_migration_mismatch",
+            m["migration_tokens_mismatch"] * 1e-6,
+            f"forced={m['n_forced_migrations']:.0f}"
+            f" mid_prefill={m['n_mid_prefill_migrations']:.0f}"),
+        row("autoscale_p99_elastic", m["p99_token_latency_elastic"],
+            f"vs fixed {m['p99_token_latency_fixed_lo']*1e3:.1f}ms"),
+        row("autoscale_goodput_elastic", m["goodput_slo_elastic"] * 1e-6,
+            f"fixed_lo={m['goodput_slo_fixed_lo']:.3f}"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for the CI smoke job")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    doc = measure(smoke=args.smoke)
+    for k in sorted(doc["metrics"]):
+        print(f"{k} = {doc['metrics'][k]}")
+    bad = doc["metrics"]["migration_tokens_mismatch"]
+    if bad:
+        raise SystemExit(f"FAIL: {bad:.0f} migrated token streams diverged")
+    if args.json:
+        write_bench_json(args.json, "autoscale_burst", doc["config"],
+                         doc["metrics"])
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -104,6 +104,23 @@ GATES = {
         # policy regression, not noise
         "baseline_floors": ("goodput_slo",),
     },
+    "autoscale_burst": {
+        "wall": (),
+        # live migration is lossless BY CONSTRUCTION: every forcibly
+        # ping-pong-migrated request's token stream must equal the
+        # unmigrated drain bit for bit, and every request must finish —
+        # both pinned at 0 by the baseline, "must not grow" means stay 0
+        "exact": ("migration_tokens_mismatch", "migration_unfinished"),
+        "host_exact": (),
+        # on the committed bursty trace, elastic capacity must stay at
+        # least as good as trough-sized fixed capacity on p99 workflow
+        # token latency (measured ~4x better; 1.0 only trips if
+        # elasticity stops helping at all)
+        "ratio_floors": {"elastic_vs_fixed_p99_ratio": 1.0},
+        # deterministic seeded sim: elastic goodput under SLO must not
+        # drop below the committed baseline as the autoscaler evolves
+        "baseline_floors": ("goodput_slo_elastic",),
+    },
 }
 EMPTY_GATE = {"wall": (), "exact": (), "host_exact": (), "ratio_floors": {}}
 

@@ -25,6 +25,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        autoscale_burst,
         chunked_prefill,
         cluster_overlap,
         fig03_agent_profiles,
@@ -49,7 +50,7 @@ def main() -> None:
                fig16_sorting_accuracy, fig17_larger_llm, fig18_ablation,
                overhead, kernel_bench, prefix_reuse, chunked_prefill,
                iteration_fusion, cluster_overlap, latency_breakdown,
-               shard_scale]
+               shard_scale, autoscale_burst]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -11,18 +11,21 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.agents.messaging import Headers, MessageBus
-from repro.core import KairosScheduler, Orchestrator
+from repro.core import Orchestrator
 from repro.core.orchestrator import HardwareProfile
 from repro.models import build_model
 from repro.obs.trace import NULL_TRACER, TraceContext, Tracer
-from repro.serving import LLMEngine, PagedModelRunner, ServingCluster
+from repro.serving import LLMEngine, ServingCluster, ServingConfig
 from repro.serving.request import Request
+
+_UNSET = object()   # sentinel: tells an omitted legacy kwarg from a passed one
 
 
 class BaseAgent:
@@ -71,27 +74,56 @@ class BaseAgent:
 
 class Workflow:
     """Define engines + agents, then ``run(...)`` user tasks through the
-    Kairos load balancer over real paged-KV engine instances."""
+    Kairos load balancer over real paged-KV engine instances.
 
-    def __init__(self, app_name: str = "app", n_instances: int = 1,
-                 num_blocks: int = 128, block_size: int = 8, max_batch: int = 4,
-                 prefix_caching: bool = False,
-                 prefill_chunk_tokens: Optional[int] = None,
+    Serving knobs come in as ONE :class:`ServingConfig` (``config=``).
+    The per-knob constructor kwargs (``num_blocks=...``, ...) are a
+    deprecated compatibility shim for one release: they still work, warn
+    with ``DeprecationWarning``, and are internally folded into a
+    ``ServingConfig`` — mixing them with ``config=`` is an error."""
+
+    def __init__(self, app_name: str = "app",
+                 config: Optional[ServingConfig] = None, *,
+                 n_instances=_UNSET, num_blocks=_UNSET, block_size=_UNSET,
+                 max_batch=_UNSET, prefix_caching=_UNSET,
+                 prefill_chunk_tokens=_UNSET,
                  pipelined: bool = True, llm_timeout_s: float = 300.0,
                  tracer: Tracer = NULL_TRACER):
+        legacy = {k: v for k, v in dict(
+            n_instances=n_instances, num_blocks=num_blocks,
+            block_size=block_size, max_batch=max_batch,
+            prefix_caching=prefix_caching,
+            prefill_chunk_tokens=prefill_chunk_tokens).items()
+            if v is not _UNSET}
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=ServingConfig(...) or the legacy "
+                    f"per-knob kwargs ({sorted(legacy)}), not both")
+            warnings.warn(
+                "Workflow's per-knob serving kwargs are deprecated; pass "
+                f"config=ServingConfig({', '.join(sorted(legacy))}, ...) "
+                "instead (one release of compatibility)",
+                DeprecationWarning, stacklevel=2)
+            # Workflow's historical default batch differed from
+            # ServingConfig's — pin it so shimmed calls behave identically
+            legacy.setdefault("max_batch", 4)
+            config = ServingConfig(**legacy)
+        elif config is None:
+            config = ServingConfig(max_batch=4)
         self.app_name = app_name
-        self.prefix_caching = prefix_caching
-        self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.config = config
+        self.prefix_caching = config.prefix_caching
+        self.prefill_chunk_tokens = config.prefill_chunk_tokens
         self.pipelined = pipelined
         self.llm_timeout_s = llm_timeout_s
         self.tracer = tracer
         self.bus = MessageBus()
         self.orch = Orchestrator(hardware=HardwareProfile(
-            decode_tok_per_s=20.0, kv_capacity_tokens=num_blocks * block_size),
-            prefix_caching=prefix_caching, tracer=tracer)
+            decode_tok_per_s=20.0,
+            kv_capacity_tokens=config.kv_capacity_tokens),
+            prefix_caching=config.prefix_caching, tracer=tracer)
         self.agents: Dict[str, BaseAgent] = {}
-        self.engines: List[LLMEngine] = []
-        self._engine_cfg = (n_instances, num_blocks, block_size, max_batch)
         self.vocab_size = 512
         self._submissions: "queue.Queue[Tuple[Request, threading.Event, list]]" = queue.Queue()
         self._pending: Dict[int, Tuple[Request, threading.Event, list]] = {}
@@ -106,37 +138,31 @@ class Workflow:
         """Back-compat alias: the cluster owns the load balancer now."""
         return self.cluster.balancer if self.cluster is not None else None
 
+    @property
+    def engines(self) -> List[LLMEngine]:
+        """Back-compat alias; under elasticity the engine list changes at
+        runtime, so don't cache it — prefer the cluster contract
+        (``submit``/``step``/``drain``/``metrics_snapshot``)."""
+        return self.cluster.engines if self.cluster is not None else []
+
     # ------------------------------------------------------------------ setup
     def add_engine(self, name: str, model: str = "qwen3-1.7b", seed: int = 0):
-        """Instantiate ``n_instances`` engines serving the REDUCED variant of
-        the named architecture (CPU container; full configs go through the
-        dry-run), wired into a :class:`ServingCluster` — pipelined
-        breadth-first execution, OOM fencing feedback, and the instance
-        schedulers' ``can_admit`` as the dispatcher's admit probe."""
+        """Instantiate the serving cluster described by ``self.config``,
+        serving the REDUCED variant of the named architecture (CPU
+        container; full configs go through the dry-run).
+        ``ServingCluster.from_config`` wires everything the hand-rolled
+        loop used to: per-instance runners cloned from one compile,
+        orchestrator-backed instance scheduling, OOM fencing feedback,
+        the instance schedulers' ``can_admit`` as the dispatcher's admit
+        probe — and an engine factory so an attached autoscaler can grow
+        the cluster later."""
         from repro.configs import get_config
         cfg = get_config(model).reduced()
         self.vocab_size = cfg.vocab_size
         m = build_model(cfg)
         params = m.init_params(jax.random.PRNGKey(seed))
-        n, blocks, bs, mb = self._engine_cfg
-        runner0 = PagedModelRunner(m, params, num_blocks=blocks,
-                                   block_size=bs, max_batch=mb)
-        for i in range(n):
-            # instances 1..n-1 clone the first runner: same params, fresh
-            # pool, shared compiled step functions (one compile, not n)
-            runner = runner0 if i == 0 else runner0.clone()
-            # Kairos priorities carry into the serving iteration: engine
-            # waiting queues are ordered by the same orchestrator-backed
-            # policy the load balancer uses (batch_scheduler.py)
-            self.engines.append(LLMEngine(
-                runner, instance_id=i, max_batch=mb,
-                enable_prefix_cache=self.prefix_caching,
-                policy=KairosScheduler(self.orch.priority_score),
-                prefill_chunk_tokens=self.prefill_chunk_tokens,
-                tracer=self.tracer))
-        self.cluster = ServingCluster(
-            self.engines, self.orch,
-            scheduler=KairosScheduler(self.orch.priority_score),
+        self.cluster = ServingCluster.from_config(
+            m, params, self.orch, self.config,
             pipelined=self.pipelined, tracer=self.tracer)
 
     def add_agent(self, agent_name: str, agent_class, use_model: str = "",
@@ -233,12 +259,19 @@ class Workflow:
         return self.cluster.metrics_snapshot()
 
     def prefix_cache_stats(self) -> dict:
-        """Aggregate prefill-token savings across engine instances."""
-        total = sum(e.stats.prefill_tokens for e in self.engines)
-        saved = sum(e.stats.prefill_tokens_saved for e in self.engines)
-        return {"prefill_tokens": total, "prefill_tokens_saved": saved,
-                "kv_cached_tokens": sum(e.kv_cached_tokens for e in self.engines),
-                "savings": saved / max(total + saved, 1)}
+        """Aggregate prefill-token savings across engine instances,
+        derived from the cluster's public metrics snapshot."""
+        snap = self.cluster.metrics_snapshot()
+
+        def total(metric: str) -> float:
+            return sum(v for k, v in snap.items()
+                       if k.endswith(f".{metric}"))
+
+        saved = total("prefill_tokens_saved")
+        prefill = total("prefill_tokens")
+        return {"prefill_tokens": prefill, "prefill_tokens_saved": saved,
+                "kv_cached_tokens": total("kv_cached_tokens"),
+                "savings": saved / max(prefill + saved, 1)}
 
     # ------------------------------------------------------------------ run
     def submit_task(self, entry_agent: str, input_data: dict) -> str:

@@ -79,10 +79,39 @@ class TimeSlotDispatcher:
         self._slot_starts: Optional[np.ndarray] = None
         self._occ: Dict[int, np.ndarray] = {}
 
+    # --------------------------------------------------------------- elasticity
+    def add_instance(self, inst: InstanceModel):
+        """Autoscaler scale-up: start routing to a new instance."""
+        assert inst.instance_id not in self.instances
+        self.instances[inst.instance_id] = inst
+        self._cache_now = float("nan")
+
+    def remove_instance(self, instance_id: int) -> InstanceModel:
+        """Autoscaler scale-down: stop routing to an instance.  Returns
+        the popped model so the cluster can re-home surviving ramps via
+        :meth:`adopt_ramp`.  Any OOM fence dies with the model — a later
+        ``add_instance`` under the same id starts unfenced (the
+        scale-down-while-fenced regression test pins this)."""
+        inst = self.instances.pop(instance_id)
+        self._occ.pop(instance_id, None)
+        self._cache_now = float("nan")
+        return inst
+
+    def adopt_ramp(self, instance_id: int, req_id: int, ramp):
+        """Live migration: re-home one in-flight request's memory ramp to
+        its new instance (None ramps — e.g. already expired — are
+        dropped)."""
+        if ramp is not None:
+            self.instances[instance_id].ramps[req_id] = ramp
+            self._cache_now = float("nan")
+
     # ---------------------------------------------------------------- feedback
     def on_finish(self, instance_id: int, req_id: int):
-        """Early/normal finish: drop the ramp's future slots (§6 adaptive)."""
-        self.instances[instance_id].ramps.pop(req_id, None)
+        """Early/normal finish: drop the ramp's future slots (§6 adaptive).
+        The instance may have been scaled away since dispatch."""
+        inst = self.instances.get(instance_id)
+        if inst is not None:
+            inst.ramps.pop(req_id, None)
         self._cache_now = float("nan")
 
     def on_oom(self, instance_id: int, now: float):
@@ -95,8 +124,10 @@ class TimeSlotDispatcher:
     def is_fenced(self, instance_id: int, now: float) -> bool:
         """True while the instance sits in its post-OOM cooldown — the
         cluster runtime and tests introspect fencing through this instead
-        of poking at ``InstanceModel.fenced_until``."""
-        return now < self.instances[instance_id].fenced_until
+        of poking at ``InstanceModel.fenced_until``.  An instance that has
+        been scaled away is not fenced (its fence died with its model)."""
+        inst = self.instances.get(instance_id)
+        return inst is not None and now < inst.fenced_until
 
     # ---------------------------------------------------------------- internals
     def _refresh_cache(self, now: float, min_end: float):
@@ -160,8 +191,28 @@ class RoundRobinDispatcher:
         self._ptr = 0
         self.admit_probe = admit_probe
 
+    def add_instance(self, inst: InstanceModel):
+        assert inst.instance_id not in self.instances
+        self.instances[inst.instance_id] = inst
+        self._order = sorted(self.instances)
+
+    def remove_instance(self, instance_id: int) -> InstanceModel:
+        inst = self.instances.pop(instance_id)
+        self._order = sorted(self.instances)
+        if self._order:
+            self._ptr %= len(self._order)
+        else:
+            self._ptr = 0
+        return inst
+
+    def adopt_ramp(self, instance_id: int, req_id: int, ramp):
+        if ramp is not None:
+            self.instances[instance_id].ramps[req_id] = ramp
+
     def on_finish(self, instance_id: int, req_id: int):
-        self.instances[instance_id].ramps.pop(req_id, None)
+        inst = self.instances.get(instance_id)
+        if inst is not None:
+            inst.ramps.pop(req_id, None)
 
     def on_oom(self, instance_id: int, now: float):
         pass
@@ -187,8 +238,21 @@ class BestFitOracleDispatcher:
         self.instances = {i.instance_id: i for i in instances}
         self.admit_probe = admit_probe
 
+    def add_instance(self, inst: InstanceModel):
+        assert inst.instance_id not in self.instances
+        self.instances[inst.instance_id] = inst
+
+    def remove_instance(self, instance_id: int) -> InstanceModel:
+        return self.instances.pop(instance_id)
+
+    def adopt_ramp(self, instance_id: int, req_id: int, ramp):
+        if ramp is not None:
+            self.instances[instance_id].ramps[req_id] = ramp
+
     def on_finish(self, instance_id: int, req_id: int):
-        self.instances[instance_id].ramps.pop(req_id, None)
+        inst = self.instances.get(instance_id)
+        if inst is not None:
+            inst.ramps.pop(req_id, None)
 
     def on_oom(self, instance_id: int, now: float):
         pass

@@ -1,3 +1,10 @@
+from repro.serving.autoscaler import (
+    Autoscaler,
+    AutoscalerConfig,
+    ClusterSignals,
+    InstanceSignal,
+    signals_from_cluster,
+)
 from repro.serving.batch_scheduler import (
     BatchScheduler,
     IterationBatch,
@@ -10,6 +17,7 @@ from repro.serving.batch_scheduler import (
     flatten_plan,
     pad_bucket,
 )
+from repro.serving.config import SIM_FIELD_MAP, ServingConfig
 from repro.serving.engine import (
     LLMEngine,
     PagedModelRunner,
@@ -18,6 +26,13 @@ from repro.serving.engine import (
 )
 from repro.serving.cluster import ServingCluster
 from repro.serving.kv_cache import BlockManager, NoFreeBlocks
+from repro.serving.migration import (
+    MigrationError,
+    RequestSnapshot,
+    migrate,
+    restore_request,
+    snapshot_request,
+)
 from repro.serving.prefix_cache import PrefixCache, PrefixCacheStats
 from repro.serving.request import (
     CompletionRecord,
@@ -33,4 +48,9 @@ __all__ = ["BatchScheduler", "IterationBatch", "IterationPlan",
            "TokenBuffer", "TokenRef", "BlockManager", "NoFreeBlocks",
            "PrefixCache", "PrefixCacheStats",
            "CompletionRecord", "Request", "RequestState",
-           "reset_request_ids"]
+           "reset_request_ids",
+           "ServingConfig", "SIM_FIELD_MAP",
+           "Autoscaler", "AutoscalerConfig", "ClusterSignals",
+           "InstanceSignal", "signals_from_cluster",
+           "MigrationError", "RequestSnapshot", "migrate",
+           "restore_request", "snapshot_request"]

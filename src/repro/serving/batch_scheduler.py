@@ -304,6 +304,8 @@ class SchedStats:
     recent_oom: bool = False      # set on preemption; cleared by monitor reads
     prefill_tokens: int = 0       # prompt tokens actually computed
     prefill_tokens_saved: int = 0  # prompt tokens served from the prefix cache
+    n_migrated_out: int = 0       # live requests released to another instance
+    n_migrated_in: int = 0        # live requests adopted from another instance
 
 
 # =============================================================================
@@ -674,6 +676,87 @@ class BatchScheduler:
         if req.prefilled_len >= req.prompt_len:
             self._pending_hashes.pop(req.req_id, None)
             self._inserted_blocks.pop(req.req_id, None)
+
+    # --------------------------------------------------------------- migration
+    def release(self, req: Request) -> None:
+        """Detach a live request WITHOUT resetting its progress — the
+        source half of a live migration.  Unlike :meth:`_preempt`, the
+        request keeps ``prefilled_len`` / ``output_len`` /
+        ``output_tokens`` / ``first_token_time``: its KV is about to be
+        rebuilt verbatim on another instance, not recomputed.  Blocks are
+        freed here (shared/cached blocks merely lose a reference);
+        provisional cache entries whose KV was never executed are
+        retracted exactly as preemption would, including the cascade onto
+        same-plan admissions that matched them."""
+        if req in self.waiting:
+            self.waiting.remove(req)
+            req.state = RequestState.QUEUED
+            return
+        assert req in self.running, f"req {req.req_id} not on this scheduler"
+        pairs = self._provisional.pop(req.req_id, None)
+        dropped = (self.prefix_cache.retract(pairs, self.bm)
+                   if pairs and self.prefix_cache is not None else [])
+        self.bm.free(req.req_id)
+        self._pending_hashes.pop(req.req_id, None)
+        self._inserted_blocks.pop(req.req_id, None)
+        self.running.remove(req)
+        req.state = RequestState.QUEUED
+        self.stats.n_migrated_out += 1
+        if dropped:
+            garbage = set(dropped)
+            for r in [r for r in self.running
+                      if garbage.intersection(self.bm.block_table(r.req_id))]:
+                if r in self.running:
+                    self._preempt(r)
+
+    def preempt(self, req: Request) -> None:
+        """Public recompute-requeue of one running request (migration
+        fallback when no instance can adopt it): progress resets, the
+        request re-enters a waiting queue from scratch."""
+        self._preempt(req)
+
+    def can_adopt(self, req: Request, cached_blocks: int = 0) -> bool:
+        """Whether :meth:`adopt` would succeed right now: a batch slot
+        plus blocks for the request's resident KV and admission-style
+        reserve (zero-ref parked cache blocks count — adopt may evict)."""
+        if len(self.running) >= self.max_running:
+            return False
+        need = self.bm.blocks_needed(
+            max(req.total_len + 1, req.prompt_len + 1)) - cached_blocks
+        return need <= self.bm.free_blocks + self.bm.cached_blocks
+
+    def adopt(self, req: Request, now: float,
+              cached: Optional[List[int]] = None,
+              hashes: Optional[List[int]] = None) -> List[int]:
+        """Attach a migrated request to this scheduler's running set — the
+        target half of a live migration — and return its block table for
+        the caller to restore KV into.  ``cached`` seeds the table with
+        prefix blocks already resident here (references acquired by the
+        caller, e.g. ``PrefixCache.match``); ``hashes`` is the request's
+        full-block hash chain, re-registered so the transferred prefix is
+        shareable on this instance too (and, for a mid-prefill request,
+        so later chunks keep registering as they execute).  Raises
+        :class:`~repro.serving.kv_cache.NoFreeBlocks` when capacity is
+        insufficient — probe :meth:`can_adopt` first."""
+        cached = list(cached or [])
+        reserve = max(req.total_len + 1, req.prompt_len + 1)
+        need = self.bm.blocks_needed(reserve) - len(cached)
+        if need > self.bm.free_blocks and self.prefix_cache is not None:
+            self.prefix_cache.evict(self.bm, need - self.bm.free_blocks)
+        if cached:
+            table = self.bm.allocate_shared(req.req_id, cached, reserve)
+        else:
+            table = self.bm.allocate(req.req_id, reserve)
+        req.state = RequestState.RUNNING
+        if req.exec_start_time < 0:
+            req.exec_start_time = now
+        self.running.append(req)
+        self.stats.n_migrated_in += 1
+        if hashes and self.prefix_cache is not None:
+            self._pending_hashes[req.req_id] = list(hashes)
+            self._inserted_blocks[req.req_id] = len(cached)
+            self._register_written_blocks(req)
+        return table
 
     # ------------------------------------------------------------------ finish
     def finish(self, req: Request, t: float):

@@ -49,6 +49,7 @@ from typing import Callable, List, Optional, Sequence
 
 from repro.obs.metrics import merge_snapshots
 from repro.obs.trace import NULL_TRACER, Tracer
+from repro.serving.config import ServingConfig
 from repro.serving.engine import LLMEngine
 from repro.serving.request import CompletionRecord, Request
 
@@ -95,6 +96,7 @@ class ServingCluster:
                  scheduler=None, dispatcher=None, pipelined: bool = True,
                  oom_feedback: bool = True,
                  clock: Callable[[], float] = time.monotonic,
+                 engine_factory: Optional[Callable[[int], LLMEngine]] = None,
                  tracer: Tracer = NULL_TRACER):
         from repro.core.balancer import LoadBalancer
         from repro.core.dispatcher import InstanceModel, TimeSlotDispatcher
@@ -121,6 +123,14 @@ class ServingCluster:
         self.clock = clock
         self.tracer = tracer
         self._pool: Optional[ThreadPoolExecutor] = None
+        # elasticity: the factory mints engines for scale_up (set by
+        # from_config; manual clusters may pass their own); the autoscaler
+        # is attached post-construction and consulted at step start.
+        self._engine_factory = engine_factory
+        self.autoscaler = None
+        self.config: Optional[ServingConfig] = None
+        self.n_migrations = 0
+        self.migrated_bytes = 0
         if dispatcher is None:
             dispatcher = TimeSlotDispatcher(
                 [InstanceModel(e.instance_id, e.kv_capacity_tokens)
@@ -178,9 +188,72 @@ class ServingCluster:
                                      **(engine_kwargs or {})))
         return cls(engines, orchestrator, tracer=tracer, **cluster_kwargs)
 
-    # ------------------------------------------------------------------ intake
+    @classmethod
+    def from_config(cls, model, params, orchestrator,
+                    config: ServingConfig, *, backend=None, devices=None,
+                    clock: Callable[[], float] = time.monotonic,
+                    tracer: Tracer = NULL_TRACER, **cluster_kwargs
+                    ) -> "ServingCluster":
+        """Build the whole cluster from ONE :class:`ServingConfig`.
+
+        The config describes "an instance like the others" — which is
+        what makes elasticity possible: the returned cluster carries an
+        engine factory minting identically-configured engines (shared
+        compiled fns via :meth:`PagedModelRunner.clone`, private KV
+        pool), so :meth:`scale_up` can add capacity at runtime.
+        ``model_parallel > 1`` routes through :meth:`on_mesh_slices`
+        (static topology — mesh slices are placement, fixed at launch,
+        so no elastic factory there)."""
+        from repro.core.scheduler import FCFSScheduler
+        from repro.serving.engine import PagedModelRunner
+
+        if config.tracing and tracer is NULL_TRACER:
+            tracer = Tracer(clock=clock)
+        scheduler = (cluster_kwargs.pop("scheduler", None)
+                     or config.make_policy(orchestrator) or FCFSScheduler())
+        if config.model_parallel > 1:
+            cluster = cls.on_mesh_slices(
+                model, params, orchestrator,
+                n_instances=config.n_instances,
+                model_parallel=config.model_parallel, devices=devices,
+                runner_kwargs=config.runner_kwargs(),
+                engine_kwargs=config.engine_kwargs(),
+                tracer=tracer, scheduler=scheduler, clock=clock,
+                **cluster_kwargs)
+            cluster.config = config
+            return cluster
+        runner0 = PagedModelRunner.from_config(model, params, config,
+                                               backend=backend)
+
+        def make_engine(iid: int, runner=None) -> LLMEngine:
+            return LLMEngine.from_config(
+                runner if runner is not None else runner0.clone(), config,
+                instance_id=iid, clock=clock,
+                policy=config.make_policy(orchestrator), tracer=tracer)
+
+        engines = [make_engine(0, runner0)]
+        engines += [make_engine(i) for i in range(1, config.n_instances)]
+        cluster = cls(engines, orchestrator, scheduler=scheduler,
+                      engine_factory=make_engine, clock=clock,
+                      tracer=tracer, **cluster_kwargs)
+        cluster.config = config
+        return cluster
+
+    # ----------------------------------------------------------- public surface
+    #
+    # ``submit()`` / ``step()`` / ``drain()`` / ``metrics_snapshot()`` are
+    # THE cluster contract: everything a driver (Workflow, benchmarks,
+    # autoscaler policies) needs.  ``balancer`` / ``engines`` /
+    # ``dispatcher`` are internals — reaching past the contract couples
+    # callers to the control-plane layout and breaks under elasticity
+    # (engines appear and disappear at runtime).
+
     def submit(self, req: Request):
-        """Enqueue at the load balancer; the next step dispatches it."""
+        """Accept a request into the cluster.  The request is queued at
+        the load balancer and placed onto an instance by a subsequent
+        :meth:`step`; completion surfaces in that step's return value
+        (and via ``orchestrator.on_completion``).  Valid at any time,
+        including while the autoscaler is resizing the cluster."""
         self.balancer.enqueue(req)
 
     def can_admit(self, instance_id: int, req: Request) -> bool:
@@ -208,8 +281,12 @@ class ServingCluster:
         one at a time with a forced host sync, reproducing the legacy
         driver loop exactly."""
         now = self.clock() if now is None else now
-        self.balancer.tick(now)
         finished: List[Request] = []
+        if self.autoscaler is not None:
+            # engines are synced between steps, which is exactly when
+            # live migration (scale-down drain) is legal
+            finished.extend(self.autoscaler.step(self, now))
+        self.balancer.tick(now)
         if self.pipelined and len(self.engines) > 1:
             if self._pool is None:
                 self._pool = ThreadPoolExecutor(
@@ -259,16 +336,159 @@ class ServingCluster:
             self.dispatcher.on_finish(r.instance_id, r.req_id)
         return done
 
+    # -------------------------------------------------------------- elasticity
+    @property
+    def n_instances(self) -> int:
+        return len(self.engines)
+
+    def attach_autoscaler(self, autoscaler) -> None:
+        """Let ``autoscaler`` drive :meth:`scale_up` / :meth:`scale_down`:
+        its ``step(cluster, now)`` runs at the start of every cluster step
+        (engines synced — the only point where migration is legal)."""
+        self.autoscaler = autoscaler
+
+    def scale_up(self, engine: Optional[LLMEngine] = None,
+                 now: Optional[float] = None) -> int:
+        """Add one instance and start routing to it.  With no ``engine``
+        given, the config-derived factory mints one (fresh instance_id,
+        cloned compiled fns, private KV pool).  Returns the instance id."""
+        from repro.core.dispatcher import InstanceModel
+        if engine is None:
+            assert self._engine_factory is not None, \
+                "scale_up needs an engine_factory (build the cluster via " \
+                "from_config) or an explicit engine"
+            engine = self._engine_factory(max(self._by_id) + 1)
+        iid = engine.instance_id
+        assert iid not in self._by_id, f"instance id {iid} already live"
+        assert all(engine.runner is not e.runner for e in self.engines), \
+            "new engine must own its runner (donated pools are per-instance)"
+        self.engines.append(engine)
+        self._by_id[iid] = engine
+        self.dispatcher.add_instance(
+            InstanceModel(iid, engine.kv_capacity_tokens))
+        self._resize_pool()
+        if self.tracer.enabled:
+            self.tracer.emit("scale-up", instance_id=iid,
+                             ts=self.clock() if now is None else now)
+        return iid
+
+    def scale_down(self, instance_id: int,
+                   now: Optional[float] = None) -> List[Request]:
+        """Retire one instance by DRAINING it through live migration —
+        no request loses progress:
+
+        1. its in-flight iteration (if any) is collected first, so
+           completions are never dropped;
+        2. the instance leaves the dispatcher — no new placements, and
+           any OOM fence dies with it (a later :meth:`scale_up` reusing
+           the id starts unfenced);
+        3. waiting (not-yet-prefilled) requests requeue at the balancer;
+        4. running requests live-migrate to the surviving instance with
+           the most free KV (their continued token streams are
+           bit-identical — see ``serving/migration.py``); if none can
+           adopt one, it falls back to preempt-and-requeue (recompute).
+
+        Returns the requests the step-1 collect finished."""
+        from repro.serving.migration import MigrationError, migrate
+        assert len(self.engines) > 1, "cannot scale below one instance"
+        now = self.clock() if now is None else now
+        e = self._by_id[instance_id]
+        finished: List[Request] = []
+        if e.has_pending:
+            finished.extend(self._collect(e, now))
+        removed = self.dispatcher.remove_instance(instance_id)
+        # releasing/preempting one request can cascade-preempt COW-
+        # entangled neighbours from running into waiting, so drain both
+        # queues to a fixed point rather than snapshotting either once
+        while e.sched.has_work:
+            for req in list(e.sched.waiting):
+                e.sched.release(req)
+                removed.ramps.pop(req.req_id, None)
+                self.balancer.enqueue(req)
+            if not e.sched.running:
+                continue
+            req = e.sched.running[0]
+            target = self._pick_migration_target(instance_id, req)
+            if target is not None:
+                try:
+                    snap = migrate(e, target, req, now)
+                except MigrationError:
+                    target = None
+            if target is not None:
+                self.n_migrations += 1
+                self.migrated_bytes += snap.n_bytes
+                self.dispatcher.adopt_ramp(
+                    target.instance_id, req.req_id,
+                    removed.ramps.pop(req.req_id, None))
+                if self.tracer.enabled:
+                    self.tracer.emit(
+                        "migrate-candidate", req_id=req.req_id,
+                        agent=req.agent_name, msg_id=req.msg_id, ts=now,
+                        to=target.instance_id, reason="scale-down",
+                        n_bytes=snap.n_bytes)
+            else:
+                # nowhere to adopt it: recompute-requeue (progress reset)
+                e.sched.preempt(req)
+                e.sched.release(req)
+                e.drop_pending_token(req.req_id)
+                removed.ramps.pop(req.req_id, None)
+                self.balancer.enqueue(req)
+        assert not e.sched.has_work and not e.has_pending
+        self.engines.remove(e)
+        del self._by_id[instance_id]
+        self._resize_pool()
+        if self.tracer.enabled:
+            self.tracer.emit("scale-down", instance_id=instance_id, ts=now)
+        return finished
+
+    def _pick_migration_target(self, exclude: int,
+                               req: Request) -> Optional[LLMEngine]:
+        """Best surviving adopter: most free KV blocks wins; fenced
+        (recently-OOMed) instances lose ties to unfenced ones."""
+        now = self.clock()
+        best, best_key = None, None
+        for e in self.engines:
+            if e.instance_id == exclude or not e.sched.can_adopt(req):
+                continue
+            key = (not self.dispatcher.is_fenced(e.instance_id, now),
+                   e.bm.free_blocks + e.bm.cached_blocks)
+            if best_key is None or key > best_key:
+                best, best_key = e, key
+        return best
+
+    def _resize_pool(self):
+        """Dispatch workers are one-per-engine; rebuild the pool lazily
+        after the engine set changes."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
     # ----------------------------------------------------------------- metrics
     def metrics_snapshot(self) -> dict:
-        """All engines' metrics flattened under ``engine<i>.`` prefixes,
-        plus cluster-level queue depth."""
+        """The cluster's observable state, flattened to one dict: every
+        engine's counters under ``engine<i>.`` prefixes plus cluster
+        aggregates (``queue_depth``, ``n_instances``, ``n_migrations``,
+        ``migrated_bytes``).  This is the read side of the public
+        contract — autoscaler signals and benchmark reports are derived
+        from this snapshot, never from cluster internals."""
         snap = merge_snapshots({f"engine{e.instance_id}": e.metrics_snapshot()
                                 for e in self.engines})
         snap["queue_depth"] = float(len(self.balancer.queue))
+        snap["n_instances"] = float(len(self.engines))
+        snap["n_migrations"] = float(self.n_migrations)
+        snap["migrated_bytes"] = float(self.migrated_bytes)
         return snap
 
     # ------------------------------------------------------------------ drains
+    def drain(self, max_steps: int = 100_000,
+              idle_sleep: float = 0.0) -> List[Request]:
+        """Run the cluster until all submitted work has completed and
+        return every finished request.  This is the public
+        run-to-completion entry point (the third leg of the
+        submit/drain/metrics_snapshot contract); callers that interleave
+        submissions with execution use :meth:`step` directly."""
+        return self.run_until_drained(max_steps, idle_sleep)
+
     def run_until_drained(self, max_steps: int = 100_000,
                           idle_sleep: float = 0.0) -> List[Request]:
         """Step until queue + engines are empty; returns all finishers."""

@@ -1,0 +1,135 @@
+"""Unified serving configuration: ONE dataclass for every serving layer.
+
+Before this module, the serving knobs (blocks, batch, prefix caching,
+chunked prefill, fused iteration, pool donation, ragged backend, policy,
+tracing, tensor parallelism) threaded through five drifting constructor
+kwarg lists — ``PagedModelRunner``, ``LLMEngine``, ``ServingCluster``,
+``Workflow``, and the simulator's ``SimConfig`` each re-declared a
+subset, and an elastic cluster (instances created at runtime by the
+autoscaler) had no single description of "an instance like the others"
+to build from.
+
+:class:`ServingConfig` is that single source of truth:
+
+* ``PagedModelRunner.from_config`` / ``LLMEngine.from_config`` /
+  ``ServingCluster.from_config`` consume it on the real path;
+* ``SimConfig.from_serving_config`` maps it onto the discrete-event
+  simulator (``SIM_FIELD_MAP`` below documents the field-for-field
+  correspondence; ``tests/test_serving_config.py`` asserts the map is
+  total, so a knob added to one side cannot silently not exist on the
+  other);
+* legacy per-class kwargs keep working for one release behind
+  deprecation shims (``Workflow(num_blocks=...)`` etc.).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+# ServingConfig field -> how the simulator consumes it.  Either the name
+# of the SimConfig field it maps onto, or a "->field" note for derived
+# values.  tests/test_serving_config.py asserts this map covers EVERY
+# ServingConfig field and that every plain target is a real SimConfig
+# field — real<->sim parity is enforced, not aspirational.
+SIM_FIELD_MAP = {
+    "num_blocks": "->kv_capacity_tokens",   # num_blocks * block_size
+    "block_size": "block_size",
+    "max_batch": "max_batch",
+    "prefix_caching": "prefix_caching",
+    "prefill_chunk_tokens": "prefill_chunk_tokens",
+    "fused_iteration": "fused_iteration",
+    "donate_pool": "donate_pool",
+    "ragged_backend": "->ragged_native",    # native unless a flat lowering
+    "policy": "policy",                     # "fcfs" -> "w/o-priority"
+    "tracing": "tracing",
+    "model_parallel": "tp_degree",
+    "n_instances": "n_instances",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Every serving-layer knob, in one place.
+
+    ``policy`` names the scheduling policy: ``"kairos"`` (orchestrator-
+    backed priorities at the balancer AND inside each instance) or
+    ``"fcfs"`` (arrival order everywhere).  The simulator additionally
+    accepts its baseline policy strings (``"parrot"``, ``"ayo"``, ...)
+    passed through verbatim by :meth:`SimConfig.from_serving_config`.
+
+    ``model_parallel`` is the tensor-parallel degree of each instance
+    (1 = unsharded); the mesh itself is built by the launcher
+    (``ServingCluster.from_config`` / ``on_mesh_slices``), not stored
+    here — a config must stay picklable and device-free.
+    """
+
+    # -- KV memory ----------------------------------------------------------
+    num_blocks: int = 128
+    block_size: int = 8
+    # -- batching -----------------------------------------------------------
+    max_batch: int = 8
+    prefill_chunk_tokens: Optional[int] = None
+    # -- features -----------------------------------------------------------
+    prefix_caching: bool = False
+    fused_iteration: bool = True
+    donate_pool: bool = True
+    ragged_backend: Optional[str] = None   # None = runner backend default
+    # -- policy / observability --------------------------------------------
+    policy: str = "kairos"
+    tracing: bool = False
+    # -- topology -----------------------------------------------------------
+    model_parallel: int = 1
+    n_instances: int = 1
+
+    def __post_init__(self):
+        assert self.num_blocks > 0 and self.block_size > 0
+        assert self.max_batch > 0 and self.n_instances > 0
+        assert self.model_parallel >= 1
+        assert (self.prefill_chunk_tokens is None
+                or self.prefill_chunk_tokens > 0)
+
+    # ------------------------------------------------------------- derived
+    @property
+    def kv_capacity_tokens(self) -> int:
+        return self.num_blocks * self.block_size
+
+    @property
+    def ragged_native(self) -> bool:
+        """Whether the configured ragged lowering is the native
+        segment-tiled kernel (the flat lowerings re-gather padded
+        context; the sim prices the difference)."""
+        return not str(self.ragged_backend or "").startswith("flat")
+
+    # ----------------------------------------------------- consumer kwargs
+    def runner_kwargs(self) -> dict:
+        """Constructor kwargs for :class:`PagedModelRunner` (the mesh, if
+        any, is supplied by the caller — it is placement, not config)."""
+        return dict(num_blocks=self.num_blocks, block_size=self.block_size,
+                    max_batch=self.max_batch,
+                    ragged_backend=self.ragged_backend,
+                    donate_pool=self.donate_pool)
+
+    def engine_kwargs(self) -> dict:
+        """Constructor kwargs for :class:`LLMEngine` (identity, clock,
+        policy object, and tracer are per-engine runtime wiring)."""
+        return dict(max_batch=self.max_batch,
+                    enable_prefix_cache=self.prefix_caching,
+                    prefill_chunk_tokens=self.prefill_chunk_tokens,
+                    fused_iteration=self.fused_iteration)
+
+    def make_policy(self, orchestrator):
+        """Instantiate the scheduling policy object for the real path
+        (None = FCFS default for non-kairos policies; the sim's baseline
+        policies are constructed by ``Simulation._make_policy``)."""
+        from repro.core.scheduler import KairosScheduler
+        if self.policy == "kairos":
+            return KairosScheduler(orchestrator.priority_score)
+        return None
+
+    @property
+    def sim_policy(self) -> str:
+        """The simulator's name for this policy: the real path's "fcfs"
+        (FCFS queue + memory-aware dispatch) is the sim's
+        "w/o-priority"; everything else passes through."""
+        return "w/o-priority" if self.policy == "fcfs" else self.policy

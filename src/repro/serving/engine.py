@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -230,6 +230,11 @@ class PagedModelRunner:
                 fn = smap(functools.partial(raw_suffix, n_cached=n_cached),
                           (ppar, pspec, rep, rep, rep), (rep, pspec))
                 return fn(params, pool, tokens, ctx_bt, write_idx)
+        write_blocks = self._build_write_blocks()
+        if self._tp_axis is not None:
+            write_blocks = self._smap(
+                write_blocks,
+                (self._pool_pspec, self._pool_pspec, P()), self._pool_pspec)
         self._decode_fn = self._jit_pool(decode)
         self._prefill_fn = jax.jit(self.model.prefill)
         self._suffix_fn = self._jit_pool(suffix,
@@ -238,6 +243,7 @@ class PagedModelRunner:
         self._scatter_fn = self._jit_pool(self._build_scatter_prefill(),
                                           pool_argnum=0)
         self._copy_block_fn = self._jit_pool(copy, pool_argnum=0)
+        self._write_blocks_fn = self._jit_pool(write_blocks, pool_argnum=0)
 
     def _new_pool(self) -> jnp.ndarray:
         """Fresh zeroed KV pool, placed on this runner's mesh slice with
@@ -317,7 +323,36 @@ class PagedModelRunner:
         than break benchmarks/tests if a future release drops it."""
         return sum(getattr(f, "_cache_size", lambda: 0)() for f in
                    (self._decode_fn, self._prefill_fn, self._suffix_fn,
-                    self._fused_fn, self._scatter_fn, self._copy_block_fn))
+                    self._fused_fn, self._scatter_fn, self._copy_block_fn,
+                    self._write_blocks_fn))
+
+    # -- block-granular KV transfer (live request migration) ------------------
+    def read_blocks(self, block_ids: Sequence[int]) -> np.ndarray:
+        """Gather the KV of ``block_ids`` to host:
+        (L, 2, n_blocks, block_size, n_kv, hd) numpy.  The gather is a
+        fresh buffer — the pool itself is only *read*, never donated, so
+        ``pool_address()`` is unchanged by this call (the migration tests
+        witness exactly that).  Like every pool read it must run between
+        synced iterations: an in-flight donated dispatch may be
+        overwriting the pool concurrently."""
+        self.n_dispatches += 1
+        return np.asarray(self.pool[:, :, jnp.asarray(block_ids, jnp.int32)])
+
+    def write_blocks(self, kv: np.ndarray, block_ids: Sequence[int]):
+        """Scatter transferred KV into ``block_ids`` — the restore half of
+        a live migration.  One jitted dispatch with the pool donated
+        (``self.pool`` rebinds from the result in the same statement), so
+        the target instance keeps its single resident pool buffer."""
+        assert kv.shape[2] == len(block_ids)
+        self.n_dispatches += 1
+        self.pool = self._write_blocks_fn(
+            self.pool, jnp.asarray(kv, self.pool.dtype),
+            jnp.asarray(block_ids, jnp.int32))
+
+    def _build_write_blocks(self):
+        def write(pool, kv, bt):
+            return pool.at[:, :, bt].set(kv)
+        return write
 
     # -- prefill: run the model once, scatter its contiguous KV into pages ---
     def prefill(self, tokens: jnp.ndarray, block_table: List[int]):
@@ -619,7 +654,18 @@ class PagedModelRunner:
         c._fused_fn = self._fused_fn
         c._scatter_fn = self._scatter_fn
         c._copy_block_fn = self._copy_block_fn
+        c._write_blocks_fn = self._write_blocks_fn
         return c
+
+    @classmethod
+    def from_config(cls, model: LanguageModel, params, config,
+                    backend: Optional[str] = None,
+                    mesh: Optional[Mesh] = None) -> "PagedModelRunner":
+        """Build a runner from a :class:`~repro.serving.config.ServingConfig`
+        (the mesh, being device placement rather than configuration, is
+        supplied separately)."""
+        return cls(model, params, backend=backend, mesh=mesh,
+                   **config.runner_kwargs())
 
 
 # =============================================================================
@@ -751,6 +797,19 @@ class LLMEngine:
             on_preempt=lambda r: self._next_tok.pop(r.req_id, None),
             tracer=tracer, instance_id=instance_id)
 
+    @classmethod
+    def from_config(cls, runner: PagedModelRunner, config, *,
+                    instance_id: int = 0, eos_token: int = -1,
+                    clock: Callable[[], float] = time.monotonic,
+                    policy: Optional[SchedulerPolicy] = None,
+                    tracer: Tracer = NULL_TRACER) -> "LLMEngine":
+        """Build an engine from a :class:`~repro.serving.config.ServingConfig`
+        (identity, clock, policy object and tracer are runtime wiring, not
+        configuration)."""
+        return cls(runner, instance_id=instance_id, eos_token=eos_token,
+                   clock=clock, policy=policy, tracer=tracer,
+                   **config.engine_kwargs())
+
     @property
     def waiting(self) -> List[Request]:
         return self.sched.waiting
@@ -758,6 +817,22 @@ class LLMEngine:
     @property
     def running(self) -> List[Request]:
         return self.sched.running
+
+    # ------------------------------------------------- pending-token surface
+    # (live migration moves a mid-decode request's sampled-but-not-yet-fed
+    # token between engines; these keep serving/migration.py off _next_tok)
+    def pending_token(self, req_id: int) -> Optional[int]:
+        """The request's sampled-but-not-yet-fed next token, materialized
+        to a plain int (syncs a deferred :class:`TokenRef`), or None for a
+        request still mid-prefill."""
+        tok = self._next_tok.get(req_id)
+        return None if tok is None else int(tok)
+
+    def set_pending_token(self, req_id: int, tok: int):
+        self._next_tok[req_id] = int(tok)
+
+    def drop_pending_token(self, req_id: int):
+        self._next_tok.pop(req_id, None)
 
     @property
     def stats(self) -> SchedStats:

@@ -34,12 +34,19 @@ from repro.core import (
 )
 from repro.core.orchestrator import HardwareProfile
 from repro.obs.trace import NULL_TRACER, Tracer
+from repro.serving.autoscaler import (
+    Autoscaler,
+    AutoscalerConfig,
+    ClusterSignals,
+    InstanceSignal,
+)
 from repro.serving.batch_scheduler import (
     TABLE_BUCKET_FLOOR,
     BatchScheduler,
     KeyPrefixMatcher,
     pad_bucket,
 )
+from repro.serving.config import ServingConfig
 from repro.serving.kv_cache import BlockManager
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import CompletionRecord, Request, reset_request_ids
@@ -210,6 +217,7 @@ class SimConfig:
     duration: float = 120.0
     n_instances: int = 4
     kv_capacity_tokens: int = 12288   # per instance (pressure regime, §2.2.3)
+    block_size: int = 16              # KV page granularity per instance
     max_batch: int = 48               # memory-bound like the paper's vLLM setup
     cost: CostModel = LLAMA3_8B
     seed: int = 0
@@ -247,6 +255,41 @@ class SimConfig:
     # engine path with simulated timestamps (sim-vs-real breakdowns
     # diff).  The trace lands on Simulation.tracer after run().
     tracing: bool = False
+    # explicit arrival trace: [(t, app_idx)] replayed verbatim instead of
+    # the homogeneous-Poisson `rate`/`duration` sampler — the bursty
+    # traces from repro.workloads.traces replay through here (and
+    # through the real cluster, same list)
+    arrivals: Optional[List[Tuple[float, int]]] = None
+    # elastic instance count: when set, an Autoscaler (shared decision
+    # core with the real cluster's control plane) adds/retires
+    # SimInstances at decision_period_s cadence; retirement drains via
+    # the scheduler-level release/adopt migration (progress preserved)
+    autoscale: Optional[AutoscalerConfig] = None
+
+    @classmethod
+    def from_serving_config(cls, serving: ServingConfig, apps: List[AppSpec],
+                            **overrides) -> "SimConfig":
+        """Map a real-path :class:`ServingConfig` onto the simulator —
+        the executable form of ``serving.config.SIM_FIELD_MAP`` (the
+        parity test drives both).  ``overrides`` set the sim-only knobs
+        (rate, duration, cost, seed, arrivals, autoscale, ...)."""
+        base = dict(
+            apps=apps,
+            policy=serving.sim_policy,
+            n_instances=serving.n_instances,
+            kv_capacity_tokens=serving.kv_capacity_tokens,
+            block_size=serving.block_size,
+            max_batch=serving.max_batch,
+            prefix_caching=serving.prefix_caching,
+            prefill_chunk_tokens=serving.prefill_chunk_tokens,
+            fused_iteration=serving.fused_iteration,
+            donate_pool=serving.donate_pool,
+            ragged_native=serving.ragged_native,
+            tp_degree=serving.model_parallel,
+            tracing=serving.tracing,
+        )
+        base.update(overrides)
+        return cls(**base)
 
 
 @dataclasses.dataclass
@@ -270,6 +313,10 @@ class SimResults:
     policy: str
     prefill_tokens_total: int = 0
     prefill_tokens_saved: int = 0
+    n_migrated: int = 0               # live migrations during elastic drains
+    instance_seconds: float = 0.0     # capacity actually paid for
+    scale_history: List[Tuple[float, str, int, int]] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def prefill_savings(self) -> float:
@@ -295,6 +342,8 @@ class SimResults:
             "preempted": float(self.n_preempted),
             "queueing_ratio": self.queueing_ratio,
             "prefill_savings": self.prefill_savings,
+            "n_migrated": float(self.n_migrated),
+            "instance_seconds": self.instance_seconds,
         }
 
 
@@ -320,20 +369,20 @@ class Simulation:
         models = [InstanceModel(i, cfg.kv_capacity_tokens)
                   for i in range(cfg.n_instances)]
         self.scheduler, self.dispatcher, strict = self._make_policy(cfg.policy, models)
-        inst_policy = (self.scheduler
-                       if cfg.instance_priority
-                       and cfg.policy in self.INSTANCE_LEVEL_POLICIES
-                       else None)
-        self.instances = [
-            SimInstance(i, cfg.cost, cfg.kv_capacity_tokens, max_batch=cfg.max_batch,
-                        prefix_caching=cfg.prefix_caching, policy=inst_policy,
-                        prefill_chunk_tokens=cfg.prefill_chunk_tokens,
-                        fused_iteration=cfg.fused_iteration,
-                        donate_pool=cfg.donate_pool,
-                        ragged_native=cfg.ragged_native,
-                        tp_degree=cfg.tp_degree,
-                        tracer=self.tracer)
-            for i in range(cfg.n_instances)]
+        self._inst_policy = (self.scheduler
+                             if cfg.instance_priority
+                             and cfg.policy in self.INSTANCE_LEVEL_POLICIES
+                             else None)
+        # keyed by instance_id: the autoscaler adds/retires instances at
+        # runtime, so ids are stable names, not list positions
+        self.instances: Dict[int, SimInstance] = {
+            i: self._make_instance(i) for i in range(cfg.n_instances)}
+        # every instance that ever lived, for end-of-run stats (a retired
+        # instance's preemption/prefill counters still count)
+        self._all_instances: List[SimInstance] = list(self.instances.values())
+        self._spawn_time: Dict[int, float] = dict.fromkeys(self.instances, 0.0)
+        self.instance_seconds = 0.0
+        self.autoscaler = Autoscaler(cfg.autoscale) if cfg.autoscale else None
         self.balancer = LoadBalancer(
             self.scheduler, self.dispatcher, self.orch, self._submit,
             strict_head=strict, tracer=self.tracer)
@@ -343,6 +392,17 @@ class Simulation:
         self._eseq = itertools.count()
         self._msg_counter = itertools.count()
         self._balancer_armed = False
+
+    def _make_instance(self, iid: int) -> SimInstance:
+        cfg = self.cfg
+        return SimInstance(
+            iid, cfg.cost, cfg.kv_capacity_tokens, block_size=cfg.block_size,
+            max_batch=cfg.max_batch, prefix_caching=cfg.prefix_caching,
+            policy=self._inst_policy,
+            prefill_chunk_tokens=cfg.prefill_chunk_tokens,
+            fused_iteration=cfg.fused_iteration,
+            donate_pool=cfg.donate_pool, ragged_native=cfg.ragged_native,
+            tp_degree=cfg.tp_degree, tracer=self.tracer)
 
     # ------------------------------------------------------------------ policy
     def _make_policy(self, policy: str, models):
@@ -388,6 +448,84 @@ class Simulation:
         if not self._balancer_armed:
             self._balancer_armed = True
             self._push(t, "balancer", None)
+
+    # -------------------------------------------------------------- elasticity
+    def _signals(self, now: float) -> ClusterSignals:
+        inst = [InstanceSignal(
+            instance_id=i.instance_id,
+            kv_used_frac=i.bm.hard_used_blocks / i.bm.num_blocks,
+            fenced=now < self.dispatcher.instances[i.instance_id].fenced_until,
+            load=len(i.running) + len(i.waiting))
+            for i in self.instances.values()]
+        return ClusterSignals(now=now, queue_depth=self.balancer.queued,
+                              instances=inst)
+
+    def _scale_up(self, now: float):
+        iid = max(self.instances) + 1
+        inst = self._make_instance(iid)
+        self.instances[iid] = inst
+        self._all_instances.append(inst)
+        self._spawn_time[iid] = now
+        self.dispatcher.add_instance(
+            InstanceModel(iid, self.cfg.kv_capacity_tokens))
+        self.autoscaler.note_action(now, "up", iid, len(self.instances))
+        if self.tracer.enabled:
+            self.tracer.emit("scale-up", instance_id=iid, ts=now)
+
+    def _scale_down(self, victim: int, now: float):
+        """Retire a SimInstance by draining it through migration: the sim
+        analogue of the real cluster's KV-carrying path — same
+        scheduler-level release/adopt (progress preserved, no recompute),
+        minus the block bytes (the cost model has no KV contents)."""
+        removed = self.dispatcher.remove_instance(victim)
+        inst = self.instances.pop(victim)
+        self.instance_seconds += now - self._spawn_time.pop(victim)
+        while inst.sched.has_work:
+            for req in list(inst.sched.waiting):
+                inst.sched.release(req)
+                removed.ramps.pop(req.req_id, None)
+                self.balancer.enqueue(req)
+            if not inst.sched.running:
+                continue
+            req = inst.sched.running[0]
+            target = min(
+                (i for i in self.instances.values()
+                 if i.sched.can_adopt(req)),
+                key=lambda i: i.bm.hard_used_blocks, default=None)
+            if target is not None:
+                inst.sched.release(req)
+                target.sched.adopt(req, now)
+                req.instance_id = target.instance_id
+                self.dispatcher.adopt_ramp(
+                    target.instance_id, req.req_id,
+                    removed.ramps.pop(req.req_id, None))
+                if not target.busy:
+                    self._push(now, "instance_step", target.instance_id)
+                    target.busy = True
+                if self.tracer.enabled:
+                    self.tracer.emit("migrate-candidate", req_id=req.req_id,
+                                     agent=req.agent_name, msg_id=req.msg_id,
+                                     ts=now, to=target.instance_id,
+                                     reason="scale-down")
+            else:
+                inst.sched.preempt(req)
+                inst.sched.release(req)
+                removed.ramps.pop(req.req_id, None)
+                self.balancer.enqueue(req)
+        self.autoscaler.note_action(now, "down", victim, len(self.instances))
+        if self.tracer.enabled:
+            self.tracer.emit("scale-down", instance_id=victim, ts=now)
+        self._arm_balancer(now)
+
+    def _autoscale_tick(self, now: float):
+        action = self.autoscaler.decide(self._signals(now))
+        if action is None:
+            return
+        kind, victim = action
+        if kind == "up":
+            self._scale_up(now)
+        elif len(self.instances) > 1:
+            self._scale_down(victim, now)
 
     # ------------------------------------------------------------------ agents
     def _request_rng(self, wf: WorkflowState, agent: str) -> np.random.Generator:
@@ -440,18 +578,26 @@ class Simulation:
     # ------------------------------------------------------------------ run
     def run(self) -> SimResults:
         cfg = self.cfg
-        # workflow arrivals, interleaving apps uniformly
-        arrivals = arrival_times(self.rng, cfg.rate, cfg.duration)
-        for t in arrivals:
-            self._push(float(t), "workflow_arrival", None)
+        if cfg.arrivals is not None:
+            # explicit trace replay: (t, app_idx) pairs, verbatim
+            for t, app_idx in cfg.arrivals:
+                self._push(float(t), "workflow_arrival", int(app_idx))
+        else:
+            # workflow arrivals, interleaving apps uniformly
+            arrivals = arrival_times(self.rng, cfg.rate, cfg.duration)
+            for t in arrivals:
+                self._push(float(t), "workflow_arrival", None)
         self._now = 0.0
+        if self.autoscaler is not None:
+            self._push(cfg.autoscale.decision_period_s, "autoscale", None)
 
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
             self._now = t
             if kind == "workflow_arrival":
                 wf_idx = next(self._msg_counter)
-                app = cfg.apps[wf_idx % len(cfg.apps)]
+                app = cfg.apps[(payload if payload is not None else wf_idx)
+                               % len(cfg.apps)]
                 msg_id = f"wf-{wf_idx}"
                 wf = WorkflowState(msg_id, app, t)
                 self.workflows[msg_id] = wf
@@ -459,15 +605,25 @@ class Simulation:
             elif kind == "balancer":
                 self._balancer_armed = False
                 # OOM feedback from instances (§6 adaptive measure)
-                for inst in self.instances:
+                for inst in self.instances.values():
                     if inst.recent_oom:
                         inst.recent_oom = False
                         self.dispatcher.on_oom(inst.instance_id, t)
                 self.balancer.tick(t)
                 if self.balancer.queued:
                     self._arm_balancer(t + BALANCER_PERIOD)
+            elif kind == "autoscale":
+                self._autoscale_tick(t)
+                # keep deciding while the system is live; stop re-arming
+                # once all work has drained so the event loop terminates
+                if (self._events or self.balancer.queued
+                        or any(i.has_work for i in self.instances.values())):
+                    self._push(t + cfg.autoscale.decision_period_s,
+                               "autoscale", None)
             elif kind == "instance_step":
-                inst = self.instances[payload]
+                inst = self.instances.get(payload)
+                if inst is None:
+                    continue   # instance was scaled away; its work moved
                 finished, dt = inst.step(t)
                 if dt is None:
                     inst.busy = False
@@ -477,6 +633,8 @@ class Simulation:
                     self._push(t + dt, "instance_step", payload)
                     if finished and self.balancer.queued:
                         self._arm_balancer(t + dt)
+        for iid, t0 in self._spawn_time.items():
+            self.instance_seconds += self._now - t0
 
         # ---- metrics ---------------------------------------------------------
         warm_t = cfg.duration * cfg.warmup_frac
@@ -488,11 +646,18 @@ class Simulation:
         return SimResults(
             workflows=wfs,
             requests=reqs,
-            n_preempted=sum(i.n_preempted for i in self.instances),
+            n_preempted=sum(i.n_preempted for i in self._all_instances),
             queueing_ratio=qsum / max(esum, 1e-9),
             policy=cfg.policy,
-            prefill_tokens_total=sum(i.prefill_tokens_total for i in self.instances),
-            prefill_tokens_saved=sum(i.prefill_tokens_saved for i in self.instances),
+            prefill_tokens_total=sum(i.prefill_tokens_total
+                                     for i in self._all_instances),
+            prefill_tokens_saved=sum(i.prefill_tokens_saved
+                                     for i in self._all_instances),
+            n_migrated=sum(i.sched.stats.n_migrated_in
+                           for i in self._all_instances),
+            instance_seconds=self.instance_seconds,
+            scale_history=(list(self.autoscaler.history)
+                           if self.autoscaler else []),
         )
 
 

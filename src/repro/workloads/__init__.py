@@ -1,0 +1,4 @@
+"""Workload generators: trace synthesis shared by sim and real cluster."""
+from repro.workloads.traces import Trace, TraceConfig, generate_trace
+
+__all__ = ["Trace", "TraceConfig", "generate_trace"]

@@ -3,6 +3,7 @@ engine with identifier propagation and workflow reconstruction."""
 import pytest
 
 from repro.agents import BaseAgent, Workflow
+from repro.serving import ServingConfig
 
 
 class Stage1(BaseAgent):
@@ -21,7 +22,8 @@ class Stage2(BaseAgent):
 
 @pytest.mark.slow
 def test_two_stage_workflow_end_to_end():
-    wf = Workflow(app_name="test", n_instances=1, num_blocks=64, block_size=8)
+    wf = Workflow(app_name="test", config=ServingConfig(
+        n_instances=1, num_blocks=64, block_size=8, max_batch=4))
     wf.add_engine("e0", model="qwen3-1.7b")
     wf.add_agent("Stage1", Stage1)
     wf.add_agent("Stage2", Stage2)

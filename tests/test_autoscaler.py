@@ -1,0 +1,294 @@
+"""Elastic autoscaling (serving/autoscaler.py + cluster elasticity).
+
+Three layers:
+
+* the PURE decision core — hysteresis (patience streaks, cooldown
+  freeze), fleet bounds, and fenced-first victim selection, exercised on
+  hand-built :class:`ClusterSignals` with no model in sight;
+* the REAL cluster — ``scale_up`` mints a routable engine from the
+  config factory, the closed autoscaler loop grows under queue pressure
+  and shrinks back when calm, and the scale-down-of-a-fenced-instance
+  regression: retiring an OOM-fenced instance must clear its dispatcher
+  fence and requeue its in-flight work WITHOUT dropping the completions
+  of the iteration it had in flight;
+* the SIMULATOR — an elastic run on a seeded bursty trace is
+  deterministic (same seed twice => identical scale history and
+  summary) and actually scales.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Orchestrator
+from repro.core.orchestrator import HardwareProfile
+from repro.serving import (
+    Autoscaler,
+    AutoscalerConfig,
+    ClusterSignals,
+    InstanceSignal,
+    LLMEngine,
+    Request,
+    ServingCluster,
+    ServingConfig,
+    reset_request_ids,
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+# =============================================================================
+# pure decision core
+# =============================================================================
+
+
+def _sig(now, queue=0, kv=(0.1,), fenced=(), load=None):
+    inst = [InstanceSignal(instance_id=i, kv_used_frac=f,
+                           fenced=(i in fenced),
+                           load=(load[i] if load else 0.0))
+            for i, f in enumerate(kv)]
+    return ClusterSignals(now=now, queue_depth=queue, instances=inst)
+
+
+def test_scale_up_needs_patience():
+    a = Autoscaler(AutoscalerConfig(max_instances=4, queue_high=2.0,
+                                    up_patience=3))
+    assert a.decide(_sig(0.0, queue=9)) is None      # streak 1
+    assert a.decide(_sig(1.0, queue=9)) is None      # streak 2
+    assert a.decide(_sig(2.0, queue=9)) == ("up", -1)
+    # a single calm window resets the streak
+    a2 = Autoscaler(AutoscalerConfig(queue_high=2.0, up_patience=2))
+    a2.decide(_sig(0.0, queue=9))
+    a2.decide(_sig(1.0, queue=0))                    # calm: reset
+    assert a2.decide(_sig(2.0, queue=9)) is None     # back to streak 1
+
+
+def test_kv_pressure_alone_scales_up():
+    a = Autoscaler(AutoscalerConfig(kv_high=0.85, up_patience=1))
+    assert a.decide(_sig(0.0, queue=0, kv=(0.2, 0.9))) == ("up", -1)
+
+
+def test_bounds_are_respected():
+    a = Autoscaler(AutoscalerConfig(min_instances=1, max_instances=2,
+                                    up_patience=1, down_patience=1))
+    assert a.decide(_sig(0.0, queue=99, kv=(0.1, 0.1))) is None, \
+        "already at max_instances"
+    assert a.decide(_sig(1.0, queue=0, kv=(0.1,))) is None, \
+        "already at min_instances"
+
+
+def test_scale_down_needs_sustained_calm_and_cooldown_freezes():
+    cfg = AutoscalerConfig(min_instances=1, queue_high=2.0, up_patience=1,
+                           down_patience=2, cooldown_s=5.0)
+    a = Autoscaler(cfg)
+    assert a.decide(_sig(0.0, queue=9, kv=(0.1, 0.1))) == ("up", -1)
+    a.note_action(0.0, "up", 2, 3)                   # starts the freeze
+    # frozen: even sustained calm decides nothing...
+    assert a.decide(_sig(1.0, kv=(0.1,) * 3)) is None
+    assert a.decide(_sig(2.0, kv=(0.1,) * 3)) is None
+    # ...but the streak kept counting through the freeze, so the first
+    # unfrozen window can act immediately
+    assert a.decide(_sig(6.0, kv=(0.1,) * 3)) == ("down", 0)
+
+
+def test_pick_victim_prefers_fenced_then_least_loaded():
+    sig = _sig(0.0, kv=(0.3, 0.6, 0.2), fenced=(1,), load=[5.0, 9.0, 1.0])
+    assert Autoscaler.pick_victim(sig) == 1, \
+        "an OOM-fenced instance is the cheapest capacity to give back"
+    sig = _sig(0.0, kv=(0.3, 0.6, 0.2), load=[5.0, 9.0, 1.0])
+    assert Autoscaler.pick_victim(sig) == 2, "else least loaded wins"
+
+
+# =============================================================================
+# real cluster elasticity
+# =============================================================================
+
+
+_CFG = ServingConfig(num_blocks=32, block_size=8, max_batch=2,
+                     n_instances=1, policy="fcfs")
+
+
+def _orch(num_blocks=32):
+    return Orchestrator(hardware=HardwareProfile(
+        decode_tok_per_s=20.0, kv_capacity_tokens=num_blocks * 8))
+
+
+def _reqs(n, max_new=4, plen=12, seed=2):
+    rng = np.random.default_rng(seed)
+    return [Request(agent_name="a", msg_id=f"m{i}", prompt_len=plen,
+                    prompt_tokens=rng.integers(0, 500, plen).astype(np.int32),
+                    max_new_tokens=max_new, arrival_time=float(i))
+            for i in range(n)]
+
+
+def _drain(cluster, max_steps=4000):
+    done = []
+    for _ in range(max_steps):
+        done.extend(cluster.step())
+        if not cluster.has_work:
+            break
+    cluster.close()
+    assert not cluster.has_work
+    return done
+
+
+def test_scale_up_mints_routable_engine(model_and_params):
+    """The config factory's engine is a first-class instance: fresh id,
+    shared compiled fns, private pool, and the dispatcher places work on
+    it."""
+    model, params = model_and_params
+    reset_request_ids()
+    cluster = ServingCluster.from_config(model, params, _orch(), _CFG)
+    iid = cluster.scale_up()
+    assert iid == 1 and cluster.n_instances == 2
+    r0, r1 = (e.runner for e in cluster.engines)
+    assert r0._fused_fn is r1._fused_fn and r0.pool is not r1.pool
+    for q in _reqs(8):
+        cluster.submit(q)
+    done = _drain(cluster)
+    assert len(done) == 8
+    admitted = [e.stats.n_admitted for e in cluster.engines]
+    assert all(a > 0 for a in admitted), \
+        f"dispatcher must route to the new instance too: {admitted}"
+    assert cluster.metrics_snapshot()["n_instances"] == 2.0
+
+
+def test_scale_down_mid_flight_is_lossless(model_and_params):
+    """Retiring an instance mid-decode finishes every submitted request
+    (migrated or requeued, nothing dropped) and counts the migrations."""
+    model, params = model_and_params
+    reset_request_ids()
+    cluster = ServingCluster.from_config(
+        model, params, _orch(64),
+        ServingConfig(num_blocks=64, block_size=8, max_batch=4,
+                      n_instances=2, policy="fcfs"))
+    # 4 requests across 2 engines (max_batch=4): the survivor always has
+    # batch slots left, so retirement drains via real migration
+    reqs = _reqs(4, max_new=12)
+    for q in reqs:
+        cluster.submit(q)
+    done = [r for _ in range(3) for r in cluster.step()]
+    busy = max(cluster.engines, key=lambda e: len(e.sched.running))
+    assert busy.sched.running, "need in-flight work to make the test real"
+    done += cluster.scale_down(busy.instance_id)
+    assert cluster.n_instances == 1
+    done += _drain(cluster)
+    assert sorted(r.msg_id for r in done) == sorted(r.msg_id for r in reqs)
+    snap = cluster.metrics_snapshot()
+    assert snap["n_migrations"] >= 1 and snap["migrated_bytes"] > 0
+
+
+def test_scale_down_clears_oom_fence_and_keeps_completions(model_and_params):
+    """REGRESSION: retiring an OOM-fenced instance must (a) surface the
+    completions of its in-flight iteration, (b) requeue/migrate the rest
+    losslessly, (c) kill the fence — a later scale_up reusing the id
+    starts unfenced and receives placements."""
+    model, params = model_and_params
+    reset_request_ids()
+    cluster = ServingCluster.from_config(
+        model, params, _orch(64),
+        ServingConfig(num_blocks=64, block_size=8, max_batch=4,
+                      n_instances=2, policy="fcfs"))
+    victim = cluster._by_id[1]
+    # plant work directly on the victim: one request about to finish
+    # (its pending collect must surface from scale_down), one mid-decode
+    finisher, runner_up = _reqs(2, max_new=1)[0], _reqs(2, max_new=16)[1]
+    victim.submit(finisher)
+    victim.submit(runner_up)
+    victim.step()                        # prefill + sample first tokens
+    victim.dispatch_iteration()          # in-flight: this one FINISHES
+    assert victim.has_pending            # finisher (max_new=1)
+    now = cluster.clock()
+    cluster.dispatcher.on_oom(1, now)    # fence it, like a real OOM would
+    assert cluster.dispatcher.is_fenced(1, now)
+    finished = cluster.scale_down(1, now)
+    assert finisher in finished, \
+        "the in-flight iteration's completion was dropped"
+    assert not cluster.dispatcher.is_fenced(1, now), \
+        "the OOM fence must die with the instance"
+    # the mid-decode request survived somewhere (migrated or requeued)
+    survivor = cluster.engines[0]
+    assert (runner_up in survivor.sched.running
+            or runner_up in survivor.sched.waiting
+            or runner_up in cluster.balancer.queue)
+    # reuse the retired id: the new instance starts unfenced + routable
+    fresh = LLMEngine(survivor.runner.clone(), instance_id=1, max_batch=4)
+    assert cluster.scale_up(fresh, now) == 1
+    assert not cluster.dispatcher.is_fenced(1, cluster.clock())
+    done = _drain(cluster)
+    assert runner_up in done, "requeued work must still complete"
+
+
+def test_autoscaler_closed_loop_grows_and_shrinks(model_and_params):
+    """End-to-end on real engines with a fake clock: queue pressure grows
+    the fleet, the post-burst calm shrinks it back to min_instances, and
+    nothing is lost along the way."""
+    model, params = model_and_params
+    t = {"now": 0.0}
+    reset_request_ids()
+    cluster = ServingCluster.from_config(
+        model, params, _orch(), _CFG, clock=lambda: t["now"])
+    cluster.attach_autoscaler(Autoscaler(AutoscalerConfig(
+        min_instances=1, max_instances=3, queue_high=2.0, queue_low=0.5,
+        up_patience=2, down_patience=3, decision_period_s=0.2,
+        cooldown_s=0.2)))
+    reqs = _reqs(10, max_new=6)
+    for q in reqs:
+        cluster.submit(q)
+    done = []
+    for _ in range(4000):
+        t["now"] += 0.25                 # every step is a decision window
+        done.extend(cluster.step())
+        if not cluster.has_work:
+            break
+    hist = cluster.autoscaler.history
+    assert any(k == "up" for _, k, _, _ in hist), \
+        f"queue pressure never scaled up: {hist}"
+    assert max(n for _, _, _, n in hist) >= 2
+    # drain the calm tail until the fleet shrinks back
+    for _ in range(200):
+        t["now"] += 0.25
+        done.extend(cluster.step())
+        if cluster.n_instances == 1 and not cluster.has_work:
+            break
+    cluster.close()
+    assert cluster.n_instances == 1, "calm must shrink back to min"
+    assert any(k == "down" for _, k, _, _ in hist)
+    assert sorted(r.msg_id for r in done) == sorted(r.msg_id for r in reqs)
+
+
+# =============================================================================
+# simulator elasticity
+# =============================================================================
+
+
+def _elastic_sim(seed=3):
+    from repro.sim.simulator import Simulation
+    from repro.workloads.traces import bursty_trace
+    trace = bursty_trace(seed=seed, duration=24.0, base_rate=2.0,
+                         burst_mult=6.0)
+    cfg = trace.sim_config(
+        ServingConfig(num_blocks=512, block_size=16, max_batch=32,
+                      policy="kairos", n_instances=2),
+        autoscale=AutoscalerConfig(min_instances=2, max_instances=5,
+                                   queue_high=3.0, queue_low=0.5,
+                                   up_patience=2, down_patience=6,
+                                   decision_period_s=0.25, cooldown_s=1.0))
+    return Simulation(cfg).run()
+
+
+def test_sim_elastic_run_is_deterministic_and_scales():
+    a, b = _elastic_sim(), _elastic_sim()
+    assert a.scale_history, "the burst must trigger scaling"
+    assert any(k == "up" for _, k, _, _ in a.scale_history)
+    assert a.scale_history == b.scale_history
+    assert a.summary() == b.summary()
+    assert a.instance_seconds > 0
+    s = a.summary()
+    assert s["n_workflows"] > 0 and s["n_migrated"] >= 0

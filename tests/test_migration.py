@@ -1,0 +1,283 @@
+"""Live request migration (serving/migration.py).
+
+The contract under test: a running request serialized off one engine and
+rebuilt on another continues its token stream BIT-IDENTICALLY to a run
+that never migrated — mid-decode, mid-prefill (chunked), across
+mid-block boundaries, with COW-shared cached prefixes, onto warm and
+cold target caches — and the donated-pool address witness holds on both
+sides of every transfer.  Also: a refused migration (full target) is
+lossless, and the property sweep drives randomized workloads through
+repeated forced migrations (hypothesis when available, a seeded sweep
+fallback otherwise).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.serving import (
+    LLMEngine,
+    MigrationError,
+    PagedModelRunner,
+    Request,
+    migrate,
+    reset_request_ids,
+    restore_request,
+    snapshot_request,
+)
+
+
+@pytest.fixture(scope="module")
+def runner0():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return PagedModelRunner(model, params, num_blocks=64, block_size=8,
+                            max_batch=4)
+
+
+def _engine(runner0, iid, *, cache=True, chunk=None, num_blocks=None):
+    if num_blocks is not None:
+        # tiny pool for capacity-refusal tests
+        r = PagedModelRunner(runner0.model, runner0.params,
+                             num_blocks=num_blocks, block_size=8,
+                             max_batch=4)
+    else:
+        r = runner0.clone()
+    return LLMEngine(r, instance_id=iid, max_batch=4,
+                     enable_prefix_cache=cache, prefill_chunk_tokens=chunk)
+
+
+def _reqs(n=4, max_new=12, sys_len=16, uniq=9, seed=5):
+    rng = np.random.default_rng(seed)
+    sys_toks = rng.integers(0, 500, sys_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        toks = np.concatenate(
+            [sys_toks, rng.integers(0, 500, uniq + i).astype(np.int32)])
+        out.append(Request(agent_name="a", msg_id=f"m{i}",
+                           prompt_len=len(toks), prompt_tokens=toks,
+                           max_new_tokens=max_new))
+    return out
+
+
+def _drain(*engines, max_steps=4000):
+    done = []
+    for _ in range(max_steps):
+        for e in engines:
+            done.extend(e.step())
+        if not any(e.sched.has_work for e in engines):
+            return done
+    raise AssertionError("drain did not converge")
+
+
+def _tokens(done):
+    return {q.msg_id: list(q.output_tokens) for q in done}
+
+
+def _baseline(runner0, req_kw=None, *, cache=True, chunk=None):
+    reset_request_ids()
+    e = _engine(runner0, 0, cache=cache, chunk=chunk)
+    for q in _reqs(**(req_kw or {})):
+        e.submit(q)
+    return _tokens(_drain(e))
+
+
+# ---------------------------------------------------------------------------
+# deterministic round-trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("steps_before", [1, 2, 4, 7])
+def test_mid_decode_migration_token_identical(runner0, steps_before):
+    base = _baseline(runner0)
+    reset_request_ids()
+    e0, e1 = _engine(runner0, 0), _engine(runner0, 1)
+    for q in _reqs():
+        e0.submit(q)
+    done = []
+    for _ in range(steps_before):
+        done.extend(e0.step())
+    moved = list(e0.sched.running)
+    assert moved, "workload must still be running at the migration point"
+    for q in moved:
+        migrate(e0, e1, q)
+        assert q.instance_id == 1
+    done.extend(_drain(e0, e1))
+    assert _tokens(done) == base
+
+
+def test_mid_prefill_and_mid_block_migration(runner0):
+    """Chunked prefill: migrate while prefilled_len is mid-prompt and not
+    block-aligned (chunk budget 6 on block size 8 guarantees the cut
+    lands inside a block); the pending-token slot is empty mid-prefill."""
+    req_kw = dict(n=3, uniq=21, max_new=8)   # prompts 37..39 tokens
+    base = _baseline(runner0, req_kw, chunk=6)
+    reset_request_ids()
+    e0, e1 = _engine(runner0, 0, chunk=6), _engine(runner0, 1, chunk=6)
+    for q in _reqs(**req_kw):
+        e0.submit(q)
+    done = list(e0.step())
+    mid = [q for q in e0.sched.running if q.prefilled_len < q.prompt_len]
+    assert mid, "chunked prefill should leave requests mid-prompt"
+    assert any(q.prefilled_len % 8 for q in mid), "want a mid-block cut"
+    for q in list(e0.sched.running):
+        migrate(e0, e1, q)
+    done.extend(_drain(e0, e1))
+    assert _tokens(done) == base
+
+
+def test_cow_shared_blocks_migrate(runner0):
+    """Two requests sharing a cached prefix (COW-shared blocks) both
+    migrate; streams stay identical and the source pool fully drains."""
+    base = _baseline(runner0)
+    reset_request_ids()
+    e0, e1 = _engine(runner0, 0), _engine(runner0, 1)
+    for q in _reqs():
+        e0.submit(q)
+    done = list(e0.step())
+    done.extend(e0.step())
+    shared = [b for b in range(e0.bm.num_blocks) if e0.bm.is_shared(b)]
+    assert shared, "shared-prefix workload should COW-share blocks"
+    for q in list(e0.sched.running):
+        migrate(e0, e1, q)
+    assert not e0.bm.owned_seqs(), "source must not leak sequences"
+    done.extend(_drain(e0, e1))
+    assert _tokens(done) == base
+
+
+def test_warm_target_prefix_cache_adopts_blocks(runner0):
+    """A target that already caches the prompt's prefix serves those
+    blocks from its own cache: restore reports cached blocks > 0 and the
+    continued stream still matches."""
+    base = _baseline(runner0)
+    reset_request_ids()
+    e0, e1 = _engine(runner0, 0), _engine(runner0, 1)
+    reqs = _reqs()
+    # warm e1's prefix cache with the shared system prompt
+    warm = Request(agent_name="w", msg_id="warm",
+                   prompt_len=reqs[0].prompt_len,
+                   prompt_tokens=np.array(reqs[0].prompt_tokens),
+                   max_new_tokens=2)
+    e1.submit(warm)
+    _drain(e1)
+    for q in reqs:
+        e0.submit(q)
+    done = [q for q in _drain_steps(e0, 3)]
+    victim = e0.sched.running[0]
+    snap = snapshot_request(e0, victim)
+    n_cached = restore_request(e1, snap)
+    assert n_cached > 0, "warm target should adopt cached prefix blocks"
+    done.extend(_drain(e0, e1))
+    # warm finished in its own earlier drain, so it is not in `done`
+    assert _tokens(done) == base
+
+
+def _drain_steps(e, n):
+    done = []
+    for _ in range(n):
+        done.extend(e.step())
+    return done
+
+
+def test_pool_addresses_stable_across_migration(runner0):
+    reset_request_ids()
+    e0, e1 = _engine(runner0, 0), _engine(runner0, 1)
+    for q in _reqs():
+        e0.submit(q)
+    e0.step()
+    a0, a1 = e0.runner.pool_address(), e1.runner.pool_address()
+    for q in list(e0.sched.running):
+        migrate(e0, e1, q)
+    if a0 is not None:
+        assert e0.runner.pool_address() == a0
+        assert e1.runner.pool_address() == a1
+
+
+def test_refused_migration_is_lossless(runner0):
+    """A target without capacity raises MigrationError BEFORE any source
+    state is released; the request finishes on the source untouched."""
+    base = _baseline(runner0)
+    reset_request_ids()
+    e0 = _engine(runner0, 0)
+    e1 = _engine(runner0, 1, num_blocks=2)   # too small to adopt anything
+    for q in _reqs():
+        e0.submit(q)
+    e0.step()
+    victim = e0.sched.running[0]
+    with pytest.raises(MigrationError):
+        migrate(e0, e1, victim)
+    assert victim in e0.sched.running, "refusal must leave the request"
+    with pytest.raises(MigrationError):
+        migrate(e0, e0, victim)           # self-migration is refused too
+    assert _tokens(_drain(e0)) == base
+
+
+def test_snapshot_carries_progress_and_pending_token(runner0):
+    reset_request_ids()
+    e0 = _engine(runner0, 0)
+    for q in _reqs(n=2):
+        e0.submit(q)
+    e0.step()
+    e0.step()
+    victim = next(q for q in e0.sched.running if q.output_len > 0)
+    out_before = list(victim.output_tokens)
+    pend = e0.pending_token(victim.req_id)
+    snap = snapshot_request(e0, victim)
+    assert snap.pending_token == pend is not None
+    assert snap.n_resident_tokens == victim.prefilled_len + victim.output_len
+    assert snap.n_blocks == snap.kv.shape[2] > 0
+    assert victim.output_tokens == out_before, "snapshot must not reset"
+    assert victim not in e0.sched.running
+
+
+# ---------------------------------------------------------------------------
+# property sweep: randomized workloads through repeated forced migrations
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip_property(seed: int, migrate_every: int, chunk, runner0):
+    req_kw = dict(n=3, max_new=8, uniq=5 + seed % 13, seed=seed)
+    base = _baseline(runner0, req_kw, chunk=chunk)
+    reset_request_ids()
+    engines = [_engine(runner0, 0, chunk=chunk),
+               _engine(runner0, 1, chunk=chunk)]
+    pending = _reqs(**req_kw)
+    done, it = [], 0
+    for _ in range(4000):
+        if pending:
+            engines[it % 2].submit(pending.pop(0))
+        for e in engines:
+            done.extend(e.step())
+        it += 1
+        if it % migrate_every == 0:
+            src = max(engines, key=lambda e: len(e.sched.running))
+            dst = engines[1 - engines.index(src)]
+            for q in list(src.sched.running):
+                if dst.sched.can_adopt(q):
+                    migrate(src, dst, q)
+        if not pending and not any(e.sched.has_work for e in engines):
+            break
+    assert _tokens(done) == base
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6), migrate_every=st.integers(1, 4),
+           chunk=st.sampled_from([None, 8]))
+    def test_migration_roundtrip_property(seed, migrate_every, chunk,
+                                          runner0):
+        _roundtrip_property(seed, migrate_every, chunk, runner0)
+
+except ImportError:   # pragma: no cover - hypothesis ships in test extras
+
+    @pytest.mark.parametrize("seed,migrate_every,chunk",
+                             [(3, 1, None), (11, 2, 8), (27, 3, None),
+                              (40, 2, 8)])
+    def test_migration_roundtrip_property(seed, migrate_every, chunk,
+                                          runner0):
+        _roundtrip_property(seed, migrate_every, chunk, runner0)

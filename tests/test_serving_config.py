@@ -1,0 +1,173 @@
+"""Unified ServingConfig (serving/config.py): one dataclass, every layer.
+
+The load-bearing assertion is FIELD PARITY: ``SIM_FIELD_MAP`` must name
+every :class:`ServingConfig` field, and every plain (non-derived) target
+must be a real :class:`SimConfig` field — so a knob added on one side
+cannot silently not exist on the other.  Around that: the
+``from_config`` builders consume the config faithfully, the simulator
+mapping translates policy/backend spellings, the Workflow legacy-kwarg
+shim warns-and-works for one release, and the cluster's public
+submit/drain/metrics_snapshot contract holds.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serving import SIM_FIELD_MAP, ServingConfig
+from repro.sim.simulator import SimConfig
+from repro.sim.workload import make_app
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+# =============================================================================
+# real <-> sim field parity (the api_redesign invariant)
+# =============================================================================
+
+
+def test_sim_field_map_is_total_over_serving_config():
+    serving_fields = {f.name for f in dataclasses.fields(ServingConfig)}
+    assert set(SIM_FIELD_MAP) == serving_fields, \
+        "every ServingConfig field must state how the simulator consumes " \
+        f"it (diff: {set(SIM_FIELD_MAP) ^ serving_fields})"
+
+
+def test_sim_field_map_targets_are_real_sim_fields():
+    sim_fields = {f.name for f in dataclasses.fields(SimConfig)}
+    for src, dst in SIM_FIELD_MAP.items():
+        dst = dst.lstrip("->")   # "->x" marks a derived value, target x
+        assert dst in sim_fields, \
+            f"SIM_FIELD_MAP[{src!r}] -> {dst!r} is not a SimConfig field"
+
+
+def test_from_serving_config_maps_every_knob():
+    serving = ServingConfig(num_blocks=96, block_size=16, max_batch=24,
+                            prefill_chunk_tokens=64, prefix_caching=True,
+                            fused_iteration=False, donate_pool=False,
+                            ragged_backend="flat_gather", policy="fcfs",
+                            tracing=True, model_parallel=2, n_instances=3)
+    sim = SimConfig.from_serving_config(serving, [make_app("QA", "G+M")])
+    assert sim.kv_capacity_tokens == 96 * 16      # derived: blocks * size
+    assert sim.block_size == 16 and sim.max_batch == 24
+    assert sim.prefill_chunk_tokens == 64 and sim.prefix_caching
+    assert not sim.fused_iteration and not sim.donate_pool
+    assert sim.ragged_native is False             # flat lowering priced
+    assert sim.policy == "w/o-priority"           # fcfs spelled sim-side
+    assert sim.tracing and sim.tp_degree == 2 and sim.n_instances == 3
+    # overrides win over the mapped values
+    sim2 = SimConfig.from_serving_config(serving, [make_app("QA", "G+M")],
+                                         n_instances=1, duration=5.0)
+    assert sim2.n_instances == 1 and sim2.duration == 5.0
+
+
+def test_derived_properties():
+    assert ServingConfig().ragged_native is True
+    assert ServingConfig(ragged_backend="native").ragged_native is True
+    assert ServingConfig(ragged_backend="flat_gather").ragged_native is False
+    assert ServingConfig(policy="kairos").sim_policy == "kairos"
+    assert ServingConfig(policy="parrot").sim_policy == "parrot"
+    assert ServingConfig(policy="fcfs").sim_policy == "w/o-priority"
+    assert ServingConfig(num_blocks=8, block_size=4).kv_capacity_tokens == 32
+
+
+# =============================================================================
+# from_config builders consume the config faithfully
+# =============================================================================
+
+
+def test_runner_and_engine_from_config(model_and_params):
+    from repro.serving import LLMEngine, PagedModelRunner
+    model, params = model_and_params
+    cfg = ServingConfig(num_blocks=24, block_size=8, max_batch=3,
+                        prefix_caching=True, prefill_chunk_tokens=16)
+    r = PagedModelRunner.from_config(model, params, cfg)
+    assert r.num_blocks == 24 and r.block_size == 8
+    e = LLMEngine.from_config(r, cfg, instance_id=7)
+    assert e.instance_id == 7 and e.max_batch == 3
+    assert e.prefix_cache is not None
+    assert e.sched.prefill_chunk_tokens == 16
+
+
+def test_cluster_from_config_and_public_contract(model_and_params):
+    from repro.core import Orchestrator
+    from repro.core.orchestrator import HardwareProfile
+    from repro.serving import Request, ServingCluster, reset_request_ids
+    model, params = model_and_params
+    reset_request_ids()
+    cfg = ServingConfig(num_blocks=32, block_size=8, max_batch=2,
+                        n_instances=2, policy="kairos")
+    orch = Orchestrator(hardware=HardwareProfile(
+        decode_tok_per_s=20.0, kv_capacity_tokens=cfg.kv_capacity_tokens))
+    cluster = ServingCluster.from_config(model, params, orch, cfg)
+    assert cluster.config is cfg and cluster.n_instances == 2
+    assert cluster._engine_factory is not None, \
+        "from_config clusters must be elastic-capable"
+    r0, r1 = (e.runner for e in cluster.engines)
+    assert r0._fused_fn is r1._fused_fn and r0.pool is not r1.pool
+    # the whole public contract, nothing else: submit -> drain -> metrics
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        cluster.submit(Request(
+            agent_name="a", msg_id=f"m{i}", prompt_len=10,
+            prompt_tokens=rng.integers(0, 500, 10).astype(np.int32),
+            max_new_tokens=3, arrival_time=float(i)))
+    done = cluster.drain()
+    cluster.close()
+    assert sorted(r.msg_id for r in done) == [f"m{i}" for i in range(4)]
+    snap = cluster.metrics_snapshot()
+    for key in ("queue_depth", "n_instances", "n_migrations",
+                "migrated_bytes"):
+        assert key in snap and isinstance(snap[key], float)
+    assert snap["n_instances"] == 2.0
+    assert sum(v for k, v in snap.items()
+               if k.endswith(".n_finished")) == 4.0
+
+
+# =============================================================================
+# Workflow legacy-kwarg deprecation shim
+# =============================================================================
+
+
+def test_workflow_accepts_config():
+    from repro.agents import Workflow
+    cfg = ServingConfig(num_blocks=48, block_size=8, max_batch=2,
+                        prefix_caching=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # no deprecation on new path
+        wf = Workflow(app_name="t", config=cfg)
+    assert wf.config is cfg
+
+
+def test_workflow_legacy_kwargs_warn_and_fold():
+    from repro.agents import Workflow
+    with pytest.warns(DeprecationWarning, match="ServingConfig"):
+        wf = Workflow(app_name="t", n_instances=2, num_blocks=48,
+                      block_size=8, prefix_caching=True)
+    assert wf.config == ServingConfig(n_instances=2, num_blocks=48,
+                                      block_size=8, prefix_caching=True,
+                                      max_batch=4)   # legacy default batch
+
+
+def test_workflow_rejects_config_plus_legacy_kwargs():
+    from repro.agents import Workflow
+    with pytest.raises(TypeError, match="not both"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            Workflow(app_name="t", config=ServingConfig(), num_blocks=8)
+
+
+def test_workflow_default_matches_legacy_default():
+    from repro.agents import Workflow
+    wf = Workflow(app_name="t")
+    assert wf.config == ServingConfig(max_batch=4), \
+        "bare Workflow() must keep its historical engine shape"

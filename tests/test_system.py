@@ -35,7 +35,7 @@ def test_end_to_end_kairos_pipeline():
     assert sc[("QA[G+M]", "MathAgent")] < sc[("QA[G+M]", "Router")]
 
     # §6: memory conservation at every instance after drain
-    for inst in sim.instances:
+    for inst in sim.instances.values():
         assert inst.bm.free_blocks == inst.bm.num_blocks
 
 
