@@ -121,6 +121,25 @@ GATES = {
         # drop below the committed baseline as the autoscaler evolves
         "baseline_floors": ("goodput_slo_elastic",),
     },
+    "disagg": {
+        "wall": (),
+        # prefill/decode disaggregation is lossless AND cheap BY
+        # CONSTRUCTION, all pinned at 0 by the baseline ("must not grow"
+        # from 0 means stays 0):
+        #   every handed-off request's token stream equals the flat
+        #   single-engine drain bit for bit, and every request finishes;
+        #   each handoff sweep spends at most one gathered donated
+        #   write_blocks dispatch on the decode target;
+        #   neither engine's pool buffer ever moves (donation witness)
+        "exact": ("handoff_tokens_mismatch", "handoff_unfinished",
+                  "handoff_dispatch_excess", "handoff_pool_moves"),
+        "host_exact": (),
+        # on the seeded long-prompt + decode-heavy mix, disaggregation
+        # must keep beating colocation on p99 TPOT at equal capacity
+        # (measured ~1.4x; 1.0 only trips if the decode-tail win
+        # disappears entirely)
+        "ratio_floors": {"disagg_vs_colocated_p99_tpot_ratio": 1.0},
+    },
 }
 EMPTY_GATE = {"wall": (), "exact": (), "host_exact": (), "ratio_floors": {}}
 

@@ -1,0 +1,293 @@
+"""Prefill/decode disaggregation: lossless handoff + decode-tail win.
+
+Two halves, one BENCH JSON (gated by ``check_regression.py`` under
+``disagg``):
+
+**A. Handoff losslessness (real engines, CI-gated EXACT).**  A
+long-prompt, decode-heavy workload — shared cached prefix, chunked
+prefill — drains through a role-typed pair (one prefill instance, one
+decode instance, handoffs swept by ``drive_handoffs`` after every
+synced step) and must produce token streams bit-identical to the flat
+single-engine drain: ``handoff_tokens_mismatch`` and
+``handoff_unfinished`` are gated at exactly 0.  The transfer cost is
+witnessed, not assumed: each handoff sweep may spend at most ONE
+gathered donated ``write_blocks`` dispatch on the decode target
+(``handoff_dispatch_excess`` pinned 0) and neither engine's pool buffer
+may ever move (``handoff_pool_moves`` pinned 0 — donation survived).
+
+**B. Disaggregated vs colocated decode tail (deterministic sim).**  A
+seeded long-prompt + decode-heavy mix replays through the discrete-event
+simulator twice at identical capacity — two general instances
+(colocated: prompt prefills stall the iterations that also carry decode
+steps, the §2.2 head-of-line pathology) vs one prefill + one decode
+instance (decode iterations never share a batch with a prefill).
+Disaggregation must keep its decode-tail win:
+``disagg_vs_colocated_p99_tpot_ratio`` (colocated p99 TPOT / disagg
+p99 TPOT) ratio-floor >= 1.0.
+
+Run: ``PYTHONPATH=src python -m benchmarks.disagg [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row, row, write_bench_json
+
+
+# =============================================================================
+# part A: role-typed drain on real engines vs the flat baseline
+# =============================================================================
+
+
+def _model_and_params():
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _workload(n_reqs: int, max_new: int) -> List:
+    """Shared 16-token system prefix + long unique tails: long prompts
+    (relative to the reduced model's pool) that cut mid-block under the
+    chunked prefill budget, then a decode-heavy phase."""
+    from repro.serving import Request
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, 500, 16).astype(np.int32)
+    reqs = []
+    for i in range(n_reqs):
+        toks = np.concatenate(
+            [prefix, rng.integers(0, 500, 13 + (i % 7)).astype(np.int32)])
+        reqs.append(Request(
+            agent_name=f"a{i % 3}", msg_id=f"m{i}", prompt_len=len(toks),
+            prompt_tokens=toks, max_new_tokens=max_new,
+            arrival_time=float(i)))
+    return reqs
+
+
+def _engine(model, params, iid, *, role="general"):
+    from repro.serving import LLMEngine, PagedModelRunner
+    r = PagedModelRunner(model, params, num_blocks=64, block_size=8,
+                         max_batch=4)
+    return LLMEngine(r, instance_id=iid, max_batch=4, role=role,
+                     enable_prefix_cache=True, prefill_chunk_tokens=8)
+
+
+def _flat_drain(model, params, cfg: Dict) -> Dict[str, List[int]]:
+    from repro.serving import reset_request_ids
+    reset_request_ids()
+    eng = _engine(model, params, 0)
+    pending = _workload(cfg["n_reqs"], cfg["max_new"])
+    done = []
+    for _ in range(100_000):
+        if pending:
+            eng.submit(pending.pop(0))
+        done.extend(eng.step())
+        if not pending and not eng.sched.has_work:
+            break
+    return {q.msg_id: list(q.output_tokens) for q in done}
+
+
+class _Cluster:
+    """The surface ``drive_handoffs`` needs: engines, tracer, fencing."""
+
+    class _Dispatcher:
+        @staticmethod
+        def is_fenced(instance_id, now):
+            return False
+
+    def __init__(self, engines):
+        from repro.obs.trace import NULL_TRACER
+        self.engines = list(engines)
+        self.tracer = NULL_TRACER
+        self.dispatcher = self._Dispatcher()
+
+
+def _disagg_drain(model, params, cfg: Dict) -> Dict:
+    """Drain the same workload through a prefill+decode pair, sweeping
+    handoffs after every synced step and witnessing the transfer cost."""
+    from repro.serving import drive_handoffs, reset_request_ids
+    reset_request_ids()
+    e0 = _engine(model, params, 0, role="prefill")
+    e1 = _engine(model, params, 1, role="decode")
+    addrs = (e0.runner.pool_address(), e1.runner.pool_address())
+    cluster = _Cluster([e0, e1])
+    pending = _workload(cfg["n_reqs"], cfg["max_new"])
+    done = []
+    n_handoffs = n_stranded = dispatch_excess = 0
+    handoff_bytes = 0
+    for it in range(100_000):
+        if pending:
+            e0.submit(pending.pop(0))
+        for e in cluster.engines:
+            done.extend(e.step())
+        hs = drive_handoffs(cluster, now=float(it))
+        n_handoffs += hs["n_handoffs"]
+        n_stranded += hs["n_stranded"]
+        handoff_bytes += hs["handoff_bytes"]
+        # one decode target: a sweep that moves anything may cost at most
+        # one gathered donated write_blocks dispatch
+        dispatch_excess += max(
+            0, hs["handoff_dispatches"] - (1 if hs["n_handoffs"] else 0))
+        if not pending and not any(e.sched.has_work for e in cluster.engines):
+            break
+    pool_moves = sum(
+        1 for e, a in zip(cluster.engines, addrs)
+        if a is not None and e.runner.pool_address() != a)
+    # per-role load attribution from the role-prefixed snapshot labels
+    from benchmarks.latency_breakdown import queue_attribution_by_role
+    from repro.obs import merge_snapshots
+    from repro.serving import ServingCluster
+    roles = queue_attribution_by_role(merge_snapshots(
+        {ServingCluster.metrics_label(e): e.metrics_snapshot()
+         for e in cluster.engines}))
+    toks = {q.msg_id: list(q.output_tokens) for q in done}
+    return {"tokens": toks, "n_handoffs": n_handoffs,
+            "n_stranded": n_stranded, "handoff_bytes": handoff_bytes,
+            "dispatch_excess": dispatch_excess, "pool_moves": pool_moves,
+            "n_on_decode": sum(q.instance_id == 1 for q in done),
+            "roles": roles}
+
+
+def measure_handoff(smoke: bool) -> Dict:
+    model, params = _model_and_params()
+    cfg = {"n_reqs": 6 if smoke else 20, "max_new": 10 if smoke else 16}
+    base = _flat_drain(model, params, cfg)
+    dis = _disagg_drain(model, params, cfg)
+    assert set(base) == set(dis["tokens"]), "drains finished different sets"
+    mismatch = sum(base[k] != dis["tokens"][k] for k in base)
+    return {
+        "handoff_tokens_mismatch": float(mismatch),
+        "handoff_unfinished": float(len(base) - len(dis["tokens"])),
+        "handoff_dispatch_excess": float(dis["dispatch_excess"]),
+        "handoff_pool_moves": float(dis["pool_moves"]),
+        "n_handoffs": float(dis["n_handoffs"]),
+        "n_stranded": float(dis["n_stranded"]),
+        "n_finished_on_decode": float(dis["n_on_decode"]),
+        "handoff_mbytes": dis["handoff_bytes"] / 1e6,
+        **dis["roles"],
+    }
+
+
+# =============================================================================
+# part B: disaggregated vs colocated decode tail (sim)
+# =============================================================================
+
+
+def _disagg_apps():
+    """Long-prompt + decode-heavy mix: a Reader whose huge prompts stall
+    colocated iterations, feeding a Writer whose long decode runs are
+    what the stalls victimize."""
+    from repro.sim.workload import AgentProfile, AppSpec
+    agents = {
+        "Reader": AgentProfile("Reader", math.log(40), 0.35,
+                               prompt_mu=math.log(1800), prompt_sigma=0.25),
+        "Writer": AgentProfile("Writer", math.log(320), 0.4,
+                               prompt_mu=math.log(160), prompt_sigma=0.3),
+    }
+
+    def route(agent, rng, hops):
+        return ["Writer"] if agent == "Reader" else []
+
+    return [AppSpec("LongDoc", agents, "Reader", route, "sequential")]
+
+
+def _p99_tpot(res) -> float:
+    from repro.obs.slo import request_samples
+    tpots = [s.tpot for s in request_samples(res.requests)
+             if s.tpot == s.tpot and s.output_len > 1]
+    return float(np.percentile(np.asarray(tpots), 99))
+
+
+def measure_tail(smoke: bool) -> Dict:
+    import dataclasses
+
+    from repro.serving import ServingConfig
+    from repro.sim.simulator import SimConfig, Simulation
+
+    serving = ServingConfig(num_blocks=768, block_size=16, max_batch=32,
+                            policy="kairos", n_instances=2)
+    apps = _disagg_apps()
+    # operating points picked below decode-pool saturation (0 stranded):
+    # the colocated/disagg p99 TPOT ratio measures ~1.35-1.4 at both
+    common = dict(rate=1.1 if smoke else 1.0,
+                  duration=60.0 if smoke else 150.0, seed=3,
+                  # monolithic prefill: a 1400-token prompt stalls the
+                  # whole colocated iteration, the pathology the
+                  # disaggregated decode instance is immune to
+                  prefill_chunk_tokens=None)
+    out: Dict[str, float] = {}
+    runs = {}
+    for name, roles in (("colocated", None),
+                        ("disagg", ("prefill", "decode"))):
+        cfg = SimConfig.from_serving_config(
+            dataclasses.replace(serving, roles=roles), apps, **common)
+        res = Simulation(cfg).run()
+        runs[name] = res
+        out[f"p99_tpot_{name}"] = _p99_tpot(res)
+        out[f"p99_token_latency_{name}"] = res.summary()["p99"]
+    out["sim_n_handoffs"] = float(runs["disagg"].n_handoffs)
+    out["sim_n_stranded"] = float(runs["disagg"].n_stranded)
+    out["disagg_vs_colocated_p99_tpot_ratio"] = (
+        out["p99_tpot_colocated"] / max(out["p99_tpot_disagg"], 1e-9))
+    return out
+
+
+# =============================================================================
+# driver
+# =============================================================================
+
+
+def measure(smoke: bool = True) -> Dict:
+    cfg = {"smoke": smoke}
+    t0 = time.time()
+    metrics = {}
+    metrics.update(measure_handoff(smoke))
+    metrics.update(measure_tail(smoke))
+    metrics["wall_total_s"] = time.time() - t0
+    return {"config": cfg, "metrics": metrics}
+
+
+def run(quick: bool = True) -> List[Row]:
+    m = measure(smoke=quick)["metrics"]
+    return [
+        row("disagg_handoff_mismatch", m["handoff_tokens_mismatch"] * 1e-6,
+            f"handoffs={m['n_handoffs']:.0f}"
+            f" excess_dispatches={m['handoff_dispatch_excess']:.0f}"),
+        row("disagg_p99_tpot", m["p99_tpot_disagg"],
+            f"colocated={m['p99_tpot_colocated']*1e3:.1f}ms"
+            f" ratio={m['disagg_vs_colocated_p99_tpot_ratio']:.2f}"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for the CI smoke job")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    doc = measure(smoke=args.smoke)
+    for k in sorted(doc["metrics"]):
+        print(f"{k} = {doc['metrics'][k]}")
+    m = doc["metrics"]
+    bad = (m["handoff_tokens_mismatch"] + m["handoff_unfinished"]
+           + m["handoff_dispatch_excess"] + m["handoff_pool_moves"])
+    if bad:
+        raise SystemExit("FAIL: handoff losslessness/cost witness violated "
+                         f"(mismatch={m['handoff_tokens_mismatch']:.0f} "
+                         f"unfinished={m['handoff_unfinished']:.0f} "
+                         f"excess={m['handoff_dispatch_excess']:.0f} "
+                         f"pool_moves={m['handoff_pool_moves']:.0f})")
+    if args.json:
+        write_bench_json(args.json, "disagg", doc["config"], doc["metrics"])
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,14 @@ Two measurements, both consuming the ``repro.obs`` event streams:
   This is where the paper's claim becomes visible in one table: Kairos
   moves latency out of the *queue* component, decode is invariant.
 
+``queue_attribution_by_role`` additionally regroups a cluster
+``metrics_snapshot()`` by instance role (the ``prefill<i>.`` /
+``decode<i>.`` / ``engine<i>.`` prefixes): on a disaggregated cluster
+it attributes queueing and load to the causing role — admissions and
+preemptions land on the prefill pool, finishes on the decode pool —
+and ``benchmarks/disagg.py`` ships the per-role totals in its BENCH
+JSON.
+
 Emits BENCH JSON (``--json``) under tag ``latency_breakdown``;
 ``--smoke`` shrinks both paths for the CI smoke job.
 
@@ -92,10 +100,11 @@ def _drive(runner0, cfg: Dict, tracer) -> Dict:
         if not pending and not cluster.has_work:
             break
     wall = time.perf_counter() - t0
+    snapshot = cluster.metrics_snapshot()
     cluster.close()
     tokens = sum(r.output_len for r in done)
     assert len(pending) == 0 and tokens > 0
-    return {"wall_s": wall, "tokens": tokens,
+    return {"wall_s": wall, "tokens": tokens, "snapshot": snapshot,
             "events": list(tracer.events()) if tracer.enabled else [],
             "dropped": tracer.dropped() if tracer.enabled else 0,
             "outputs": sorted((r.msg_id, tuple(r.output_tokens))
@@ -152,9 +161,30 @@ def measure_overhead(smoke: bool, trace_path: str = None) -> Dict:
               for u, t in zip(runs[False], runs[True])]
     out["tracing_overhead_pct"] = 100.0 * (float(np.median(ratios)) - 1)
     out["trace_events"] = float(len(best[True]["events"]))
+    # per-role load attribution (a flat cluster rolls up as "general")
+    out.update(queue_attribution_by_role(best[True]["snapshot"]))
     if trace_path:
         write_chrome_trace(trace_path, best[True]["events"],
                            dropped=best[True]["dropped"])
+    return out
+
+
+def queue_attribution_by_role(snapshot: Dict) -> Dict[str, float]:
+    """Attribute a cluster snapshot's queueing/load to the causing role.
+
+    Consumes the per-role instance prefixes ``ServingCluster.
+    metrics_label`` writes (``prefill0.``, ``decode1.``; flat clusters'
+    ``engine<i>.`` rolls up as ``general``) and returns flat
+    ``<role>_<metric>`` totals: on a disaggregated cluster, admissions /
+    preemptions / waiting depth sit on the prefill pool (recompute and
+    queueing are prefill-caused) while finishes sit on the decode pool —
+    so a queue backlog is attributable to the pool that owns it."""
+    from repro.obs import rollup_by_role
+    out: Dict[str, float] = {}
+    for role, m in sorted(rollup_by_role(snapshot).items()):
+        for metric in ("n_admitted", "n_finished", "n_preempted",
+                       "queue_depth", "running"):
+            out[f"{role}_{metric}"] = m.get(metric, 0.0)
     return out
 
 

@@ -28,6 +28,7 @@ def main() -> None:
         autoscale_burst,
         chunked_prefill,
         cluster_overlap,
+        disagg,
         fig03_agent_profiles,
         fig07_queuing_example,
         fig08_rank_correlation,
@@ -50,7 +51,7 @@ def main() -> None:
                fig16_sorting_accuracy, fig17_larger_llm, fig18_ablation,
                overhead, kernel_bench, prefix_reuse, chunked_prefill,
                iteration_fusion, cluster_overlap, latency_breakdown,
-               shard_scale, autoscale_burst]
+               shard_scale, autoscale_burst, disagg]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -6,6 +6,7 @@ by Kairos over a real JAX paged-KV engine on CPU.
 import sys
 
 from repro.agents import BaseAgent, Workflow
+from repro.serving import ServingConfig
 
 # Each agent's fixed preamble is declared as a ``system_prompt``: with
 # ``prefix_caching=True`` its KV is computed once per instance and shared
@@ -48,8 +49,9 @@ class HumanitiesAgent(BaseAgent):
 def main():
     # prefix_caching: shared-prefix KV reuse across agent calls (the knob
     # also teaches the dispatcher's memory ramps about the discount)
-    wf = Workflow(app_name="QA", n_instances=1, num_blocks=128, block_size=8,
-                  prefix_caching=True)
+    wf = Workflow(app_name="QA", config=ServingConfig(
+        n_instances=1, num_blocks=128, block_size=8, max_batch=4,
+        prefix_caching=True))
     wf.add_engine("vllm-0", model="qwen3-1.7b")           # reduced variant on CPU
     wf.add_agent("Router", Router, use_model="qwen3-1.7b")
     wf.add_agent("MathAgent", MathAgent, use_model="qwen3-1.7b")

@@ -11,7 +11,6 @@ from __future__ import annotations
 import queue
 import threading
 import time
-import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -24,8 +23,6 @@ from repro.models import build_model
 from repro.obs.trace import NULL_TRACER, TraceContext, Tracer
 from repro.serving import LLMEngine, ServingCluster, ServingConfig
 from repro.serving.request import Request
-
-_UNSET = object()   # sentinel: tells an omitted legacy kwarg from a passed one
 
 
 class BaseAgent:
@@ -77,39 +74,28 @@ class Workflow:
     Kairos load balancer over real paged-KV engine instances.
 
     Serving knobs come in as ONE :class:`ServingConfig` (``config=``).
-    The per-knob constructor kwargs (``num_blocks=...``, ...) are a
-    deprecated compatibility shim for one release: they still work, warn
-    with ``DeprecationWarning``, and are internally folded into a
-    ``ServingConfig`` — mixing them with ``config=`` is an error."""
+    The pre-PR-8 per-knob constructor kwargs (``num_blocks=...``, ...)
+    finished their one-release deprecation window and now raise
+    ``TypeError`` pointing at ``ServingConfig``."""
+
+    _REMOVED_KWARGS = ("n_instances", "num_blocks", "block_size",
+                       "max_batch", "prefix_caching",
+                       "prefill_chunk_tokens")
 
     def __init__(self, app_name: str = "app",
                  config: Optional[ServingConfig] = None, *,
-                 n_instances=_UNSET, num_blocks=_UNSET, block_size=_UNSET,
-                 max_batch=_UNSET, prefix_caching=_UNSET,
-                 prefill_chunk_tokens=_UNSET,
                  pipelined: bool = True, llm_timeout_s: float = 300.0,
-                 tracer: Tracer = NULL_TRACER):
-        legacy = {k: v for k, v in dict(
-            n_instances=n_instances, num_blocks=num_blocks,
-            block_size=block_size, max_batch=max_batch,
-            prefix_caching=prefix_caching,
-            prefill_chunk_tokens=prefill_chunk_tokens).items()
-            if v is not _UNSET}
+                 tracer: Tracer = NULL_TRACER, **legacy):
         if legacy:
-            if config is not None:
+            removed = sorted(k for k in legacy if k in self._REMOVED_KWARGS)
+            if removed:
                 raise TypeError(
-                    "pass either config=ServingConfig(...) or the legacy "
-                    f"per-knob kwargs ({sorted(legacy)}), not both")
-            warnings.warn(
-                "Workflow's per-knob serving kwargs are deprecated; pass "
-                f"config=ServingConfig({', '.join(sorted(legacy))}, ...) "
-                "instead (one release of compatibility)",
-                DeprecationWarning, stacklevel=2)
-            # Workflow's historical default batch differed from
-            # ServingConfig's — pin it so shimmed calls behave identically
-            legacy.setdefault("max_batch", 4)
-            config = ServingConfig(**legacy)
-        elif config is None:
+                    "Workflow's per-knob serving kwargs were removed; pass "
+                    f"config=ServingConfig({', '.join(removed)}, ...) "
+                    "instead")
+            raise TypeError(
+                f"unexpected keyword arguments {sorted(legacy)}")
+        if config is None:
             config = ServingConfig(max_batch=4)
         self.app_name = app_name
         self.config = config

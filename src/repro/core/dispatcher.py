@@ -12,6 +12,15 @@ Every dispatcher implements the same contract —
 ``dispatch(req, ramp, now, force=False) -> Optional[int]`` plus the
 ``on_finish`` / ``on_oom`` feedback hooks — so the load balancer calls
 them uniformly, with no signature probing.
+
+Role-typed clusters (prefill/decode disaggregation) add one routing
+axis: every :class:`InstanceModel` carries its instance's ``role`` and
+:func:`role_accepts` gates placement by the request's
+:class:`~repro.serving.request.RequestPhase` — new (prefill-phase) work
+never lands on a decode instance, decode-phase work never on a prefill
+instance.  The gate is a *hard* admission rule, so it holds even under
+``force`` (the starvation valve may override memory feasibility, never
+the role topology).
 """
 from __future__ import annotations
 
@@ -23,9 +32,22 @@ import numpy as np
 
 from repro.core.memory_model import MemoryRamp
 from repro.obs.trace import NULL_TRACER, Tracer
-from repro.serving.request import Request
+from repro.serving.request import Request, RequestPhase
 
 SLOT_LEN = 0.5  # seconds (§6: empirically favourable trade-off)
+
+
+def role_accepts(role: str, req: Request) -> bool:
+    """Whether an instance of ``role`` may receive ``req`` in its current
+    phase.  General instances take anything; prefill instances take only
+    prefill-phase work (their decode capacity exists solely as the
+    stranded-handoff fallback); decode instances take only decode-phase
+    work (arriving via handoff/migration adopt, never the balancer)."""
+    if role == "general":
+        return True
+    if role == "prefill":
+        return req.phase is not RequestPhase.DECODE
+    return req.phase is RequestPhase.DECODE
 
 
 def _slot_usage_matrix(ramps: List[MemoryRamp], slot_starts: np.ndarray,
@@ -51,6 +73,7 @@ class InstanceModel:
     capacity_tokens: float
     ramps: Dict[int, MemoryRamp] = dataclasses.field(default_factory=dict)
     fenced_until: float = -1.0
+    role: str = "general"          # disaggregation role (see role_accepts)
 
     def current_usage(self, now: float) -> float:
         return sum(r.usage(now) for r in self.ramps.values())
@@ -157,6 +180,8 @@ class TimeSlotDispatcher:
 
         best_id, best_peak = None, float("inf")
         for iid, inst in self.instances.items():
+            if not role_accepts(inst.role, req):
+                continue           # hard topology rule, force included
             if now < inst.fenced_until and not force:
                 continue
             if (self.admit_probe is not None and not force
@@ -222,6 +247,8 @@ class RoundRobinDispatcher:
         n = len(self._order)
         for k in range(n):
             iid = self._order[(self._ptr + k) % n]
+            if not role_accepts(self.instances[iid].role, req):
+                continue
             if force or self.admit_probe is None or self.admit_probe(iid, req):
                 self._ptr = (self._ptr + k + 1) % n
                 self.instances[iid].ramps[req.req_id] = ramp
@@ -262,6 +289,8 @@ class BestFitOracleDispatcher:
         best_id, best_peak = None, float("inf")
         for inst in self.instances.values():
             inst.gc(now)
+            if not role_accepts(inst.role, req):
+                continue
             if (self.admit_probe is not None and not force
                     and not self.admit_probe(inst.instance_id, req)):
                 continue

@@ -13,6 +13,7 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
     merge_snapshots,
+    rollup_by_role,
 )
 from repro.obs.critical_path import (
     CriticalPath,
@@ -41,6 +42,7 @@ __all__ = [
     "EVENT_KINDS", "NULL_TRACER", "Event", "NullTracer", "TraceContext",
     "Tracer",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "merge_snapshots",
+    "rollup_by_role",
     "CriticalPath", "StageSpan", "critical_path", "spans_from_events",
     "spans_from_requests", "stage_breakdown",
     "SLO", "RequestSample", "percentile", "request_samples", "slo_report",

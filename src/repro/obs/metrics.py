@@ -151,3 +151,29 @@ def merge_snapshots(parts: Dict[str, Optional[Dict[str, float]]]) -> Dict[str, f
         for k, v in snap.items():
             out[f"{label}.{k}" if label else k] = v
     return out
+
+
+def rollup_by_role(snapshot: Dict[str, float]) -> Dict[str, Dict[str, float]]:
+    """Regroup a merged cluster snapshot by instance ROLE.
+
+    Per-instance keys carry the cluster's :meth:`metrics_label` prefix —
+    ``prefill0.n_admitted``, ``decode1.n_finished`` for role-typed
+    instances, ``engine<i>.*`` (rolled up as ``general``) for flat ones.
+    Returns ``{role: {metric: summed value}}``; additive metrics
+    (counters, gauges, histogram ``.count``s) sum across a role's
+    instances, which is what per-role attribution consumes.  Keys
+    without an ``<alpha><digits>.`` instance prefix (cluster aggregates
+    like ``queue_depth``) are skipped."""
+    out: Dict[str, Dict[str, float]] = {}
+    for key, v in snapshot.items():
+        label, dot, metric = key.partition(".")
+        if not dot or not label or not label[-1].isdigit():
+            continue
+        role = label.rstrip("0123456789")
+        if not role.isalpha():
+            continue
+        if role == "engine":
+            role = "general"
+        bucket = out.setdefault(role, {})
+        bucket[metric] = bucket.get(metric, 0.0) + v
+    return out

@@ -50,6 +50,15 @@ Event taxonomy (``kind``):
 ``preempt``             request evicted by recompute-preemption
 ``evict``               cold prefix-cache blocks reclaimed (``data['n']``)
 ``oom-fence``           dispatcher fenced the instance after a real OOM
+``handoff-start``       prefill finished on a prefill-role instance; its KV
+                        snapshot is leaving (``data['to']`` = decode target,
+                        ``['n_blocks']``/``['n_bytes']`` = transfer size)
+``handoff-complete``    the decode target adopted the request
+                        (``data['src']``, ``['cached']`` = prefix blocks
+                        served from the target's cache instead of the wire)
+``scale-up``            autoscaler minted an instance (``data['n']`` = fleet
+                        size after; ``data['role']`` on role-typed clusters)
+``scale-down``          autoscaler retired an instance (same ``data``)
 ``finish``              request completed (``data['out']`` = output tokens)
 ======================  =====================================================
 """
@@ -62,6 +71,7 @@ from typing import Dict, List, NamedTuple, Optional
 EVENT_KINDS = (
     "submit", "dispatch", "migrate-candidate", "admit", "prefill-chunk",
     "first-token", "decode", "iteration", "preempt", "evict", "oom-fence",
+    "handoff-start", "handoff-complete", "scale-up", "scale-down",
     "finish",
 )
 

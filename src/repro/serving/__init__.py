@@ -17,7 +17,7 @@ from repro.serving.batch_scheduler import (
     flatten_plan,
     pad_bucket,
 )
-from repro.serving.config import SIM_FIELD_MAP, ServingConfig
+from repro.serving.config import ROLES, SIM_FIELD_MAP, ServingConfig
 from repro.serving.engine import (
     LLMEngine,
     PagedModelRunner,
@@ -25,11 +25,18 @@ from repro.serving.engine import (
     TokenRef,
 )
 from repro.serving.cluster import ServingCluster
+from repro.serving.handoff import (
+    HandoffError,
+    decode_targets,
+    drive_handoffs,
+    handoff,
+)
 from repro.serving.kv_cache import BlockManager, NoFreeBlocks
 from repro.serving.migration import (
     MigrationError,
     RequestSnapshot,
     migrate,
+    migrate_many,
     restore_request,
     snapshot_request,
 )
@@ -37,6 +44,7 @@ from repro.serving.prefix_cache import PrefixCache, PrefixCacheStats
 from repro.serving.request import (
     CompletionRecord,
     Request,
+    RequestPhase,
     RequestState,
     reset_request_ids,
 )
@@ -47,10 +55,11 @@ __all__ = ["BatchScheduler", "IterationBatch", "IterationPlan",
            "LLMEngine", "PagedModelRunner", "ServingCluster",
            "TokenBuffer", "TokenRef", "BlockManager", "NoFreeBlocks",
            "PrefixCache", "PrefixCacheStats",
-           "CompletionRecord", "Request", "RequestState",
+           "CompletionRecord", "Request", "RequestPhase", "RequestState",
            "reset_request_ids",
-           "ServingConfig", "SIM_FIELD_MAP",
+           "ServingConfig", "SIM_FIELD_MAP", "ROLES",
            "Autoscaler", "AutoscalerConfig", "ClusterSignals",
            "InstanceSignal", "signals_from_cluster",
-           "MigrationError", "RequestSnapshot", "migrate",
-           "restore_request", "snapshot_request"]
+           "MigrationError", "RequestSnapshot", "migrate", "migrate_many",
+           "restore_request", "snapshot_request",
+           "HandoffError", "handoff", "decode_targets", "drive_handoffs"]

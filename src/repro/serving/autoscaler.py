@@ -29,11 +29,22 @@ The decision core (:meth:`Autoscaler.decide`) is pure — it consumes a
 cluster and the discrete-event simulator share one policy:
 :func:`signals_from_cluster` adapts a :class:`ServingCluster`, the
 simulator builds its signals from :class:`SimInstance` state.
+
+Role-typed clusters (prefill/decode disaggregation) scale **each role
+pool independently**: every decision tick evaluates one
+:class:`ClusterSignals` per role, built from that role's instances and
+the slice of the balancer queue its role can actually serve
+(:func:`repro.core.dispatcher.role_accepts`) — a decode backlog never
+mints a prefill instance.  Streak counters are per pool; the policy
+bounds (``min_instances``/``max_instances``) apply per pool; the
+post-action cooldown freeze is global, so one pool's action cannot
+immediately trigger another's.  A flat cluster is one ``general`` pool
+and behaves exactly as before.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,18 +89,30 @@ class ClusterSignals:
         return len(self.instances)
 
 
-def signals_from_cluster(cluster, now: float) -> ClusterSignals:
+def signals_from_cluster(cluster, now: float,
+                         role: Optional[str] = None) -> ClusterSignals:
     """Adapt a live :class:`ServingCluster` to the decision core's
-    input.  Reads control-plane state only — no device sync."""
+    input.  Reads control-plane state only — no device sync.
+
+    With ``role`` set, the signals are role-split: only that role's
+    instances are sampled, and queue depth counts only the queued
+    requests the role could serve (``role_accepts``), so each pool
+    scales from the pressure it is responsible for."""
+    from repro.core.dispatcher import role_accepts
     inst = []
     for e in cluster.engines:
+        if role is not None and e.role != role:
+            continue
         inst.append(InstanceSignal(
             instance_id=e.instance_id,
             kv_used_frac=e.bm.hard_used_blocks / e.bm.num_blocks,
             fenced=cluster.dispatcher.is_fenced(e.instance_id, now),
             load=len(e.sched.running) + len(e.sched.waiting)))
-    return ClusterSignals(now=now, queue_depth=len(cluster.balancer.queue),
-                          instances=inst)
+    if role is None:
+        depth = len(cluster.balancer.queue)
+    else:
+        depth = sum(1 for r in cluster.balancer.queue if role_accepts(role, r))
+    return ClusterSignals(now=now, queue_depth=depth, instances=inst)
 
 
 class Autoscaler:
@@ -106,19 +129,22 @@ class Autoscaler:
 
     def __init__(self, config: AutoscalerConfig = AutoscalerConfig()):
         self.cfg = config
-        self._up_streak = 0
-        self._down_streak = 0
+        self._up_streaks: Dict[str, int] = {}
+        self._down_streaks: Dict[str, int] = {}
         self._next_decision = float("-inf")
         self._frozen_until = float("-inf")
         self.history: List[Tuple[float, str, int, int]] = []
 
     # ------------------------------------------------------------- decision
-    def decide(self, sig: ClusterSignals) -> Optional[Tuple[str, int]]:
+    def decide(self, sig: ClusterSignals,
+               role: str = "general") -> Optional[Tuple[str, int]]:
         """Pure policy: ``("up", -1)``, ``("down", victim_id)``, or None.
 
-        Call once per decision window (the caller owns the cadence); the
-        streak counters live here so both the real and simulated control
-        planes get identical hysteresis."""
+        Call once per decision window per role pool (the caller owns the
+        cadence and passes role-split signals); the per-pool streak
+        counters live here so both the real and simulated control planes
+        get identical hysteresis.  Flat callers omit ``role`` and get the
+        single ``general`` pool."""
         cfg = self.cfg
         n = sig.n_instances
         queue_per_inst = sig.queue_depth / max(1, n)
@@ -126,15 +152,17 @@ class Autoscaler:
         pressured = (queue_per_inst >= cfg.queue_high
                      or kv_max >= cfg.kv_high)
         calm = (queue_per_inst <= cfg.queue_low and kv_max <= cfg.kv_low)
-        self._up_streak = self._up_streak + 1 if pressured else 0
-        self._down_streak = self._down_streak + 1 if calm else 0
+        self._up_streaks[role] = \
+            self._up_streaks.get(role, 0) + 1 if pressured else 0
+        self._down_streaks[role] = \
+            self._down_streaks.get(role, 0) + 1 if calm else 0
         if sig.now < self._frozen_until:
             return None
         if (pressured and n < cfg.max_instances
-                and self._up_streak >= cfg.up_patience):
+                and self._up_streaks[role] >= cfg.up_patience):
             return ("up", -1)
         if (calm and n > cfg.min_instances
-                and self._down_streak >= cfg.down_patience):
+                and self._down_streaks[role] >= cfg.down_patience):
             return ("down", self.pick_victim(sig))
         return None
 
@@ -148,24 +176,42 @@ class Autoscaler:
                                   i.instance_id)).instance_id
 
     # ------------------------------------------------------------ real path
+    @staticmethod
+    def role_pools(cluster) -> List[str]:
+        """The role pools to scale, in step order.  A flat cluster is
+        the single ``general`` pool."""
+        roles = {e.role for e in cluster.engines}
+        return [r for r in ("prefill", "decode", "general")
+                if r in roles] or ["general"]
+
     def step(self, cluster, now: float) -> list:
-        """One control-plane tick against a real cluster."""
+        """One control-plane tick against a real cluster: each role pool
+        decides from its own signals.  The global cooldown means at most
+        one pool acts per tick."""
         if now < self._next_decision:
             return []
         self._next_decision = now + self.cfg.decision_period_s
-        action = self.decide(signals_from_cluster(cluster, now))
-        if action is None:
-            return []
-        kind, victim = action
+        pools = self.role_pools(cluster)
+        split = pools != ["general"]   # role-typed topology present
         finished: list = []
-        if kind == "up":
-            iid = cluster.scale_up(now=now)
-            self.history.append((now, "up", iid, cluster.n_instances))
-        else:
-            finished = cluster.scale_down(victim, now)
-            self.history.append((now, "down", victim, cluster.n_instances))
-        self._frozen_until = now + self.cfg.cooldown_s
-        self._up_streak = self._down_streak = 0
+        for role in pools:
+            sig = signals_from_cluster(cluster, now,
+                                       role=role if split else None)
+            action = self.decide(sig, role=role)
+            if action is None:
+                continue
+            kind, victim = action
+            if kind == "up":
+                iid = cluster.scale_up(now=now,
+                                       role=role if split else None)
+                self.history.append((now, "up", iid, cluster.n_instances))
+            else:
+                finished.extend(cluster.scale_down(victim, now))
+                self.history.append((now, "down", victim,
+                                     cluster.n_instances))
+            self._frozen_until = now + self.cfg.cooldown_s
+            self._up_streaks.clear()
+            self._down_streaks.clear()
         return finished
 
     def note_action(self, now: float, kind: str, instance_id: int,
@@ -175,4 +221,5 @@ class Autoscaler:
         identical across both control planes."""
         self.history.append((now, kind, instance_id, n_after))
         self._frozen_until = now + self.cfg.cooldown_s
-        self._up_streak = self._down_streak = 0
+        self._up_streaks.clear()
+        self._down_streaks.clear()

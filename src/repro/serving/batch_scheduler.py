@@ -44,7 +44,7 @@ from repro.core.scheduler import FCFSScheduler, SchedulerPolicy
 from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.kv_cache import BlockManager
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.request import Request, RequestState
+from repro.serving.request import Request, RequestPhase, RequestState
 
 
 # =============================================================================
@@ -349,6 +349,16 @@ class BatchScheduler:
         ``instance_id``.  Defaults to the disabled :data:`NULL_TRACER` —
         every emit site is guarded on ``tracer.enabled`` so un-traced
         runs pay one branch.
+    role:
+        Disaggregation role of the owning instance.  ``"general"``
+        (default) admits and decodes freely — the flat-cluster
+        behaviour.  ``"prefill"`` runs chunked prefill only: requests
+        whose prompt completes are expected to be handed off
+        (``serving/handoff.py``) and are excluded from the decode set
+        unless :meth:`allow_colocated_decode` marked them stranded (the
+        lossless fallback when every decode pool is full).  ``"decode"``
+        never admits from its waiting queue — work arrives exclusively
+        through :meth:`adopt`.
     """
 
     def __init__(self, bm: BlockManager, *,
@@ -361,8 +371,16 @@ class BatchScheduler:
                  watermark: float = 0.95,
                  on_preempt: Optional[Callable[[Request], None]] = None,
                  tracer: Tracer = NULL_TRACER,
-                 instance_id: int = -1):
+                 instance_id: int = -1,
+                 role: str = "general"):
         assert prefill_chunk_tokens is None or prefill_chunk_tokens > 0
+        assert role in ("prefill", "decode", "general"), role
+        self.role = role
+        # req_ids a prefill-role instance may decode colocated: the
+        # handoff driver strands a request here when no decode-capable
+        # target can adopt it (retried every step; decoding meanwhile
+        # loses nothing — migration is bit-identical mid-decode)
+        self.stranded: set = set()
         self.bm = bm
         self.policy = policy or FCFSScheduler()
         self.prefix_cache = prefix_cache
@@ -409,6 +427,8 @@ class BatchScheduler:
         will actually do."""
         if watermark is None:
             watermark = self.watermark - 0.05
+        if self.role == "decode":
+            return False          # decode instances admit only via adopt()
         if len(self.running) + len(self.waiting) >= self.max_running:
             return False
         pending = sum(r.prompt_len + 1 for r in self.waiting)
@@ -429,7 +449,7 @@ class BatchScheduler:
         admitted prompt holds exactly the memory the monolithic path
         would, and the chunk budget below only shapes when its compute
         happens."""
-        if not self.waiting:
+        if not self.waiting or self.role == "decode":
             return
         watermark_blocks = int(self.bm.num_blocks * self.watermark)
         admitted: List[Request] = []
@@ -533,6 +553,8 @@ class BatchScheduler:
         victim.output_tokens.clear()
         victim.prefilled_len = 0
         victim.first_token_time = -1.0             # recompute re-times TTFT
+        victim.phase = RequestPhase.PREFILL        # prompt KV gone: re-prefill
+        self.stranded.discard(victim.req_id)
         self.waiting.append(victim)
         self.stats.n_preempted += 1
         self.stats.recent_oom = True
@@ -634,11 +656,17 @@ class BatchScheduler:
                 # the chunk completing the prompt executes this very
                 # iteration: admission-time inserts are now backed by KV
                 self._provisional.pop(r.req_id, None)
+                r.phase = RequestPhase.DECODE
 
         decode: List[Request] = []
         cow: List[Tuple[int, int]] = []
         for r in self.running[: self.max_batch]:
             if r.prefilled_len < r.prompt_len:
+                continue
+            if self.role == "prefill" and r.req_id not in self.stranded:
+                # prefill instances never grow decode batches: this
+                # request is leaving through the handoff driver (or will
+                # be stranded here explicitly if no target can take it)
                 continue
             self.bm.allocate(r.req_id, r.total_len + 1)
             if self.prefix_cache is not None:
@@ -677,6 +705,24 @@ class BatchScheduler:
             self._pending_hashes.pop(req.req_id, None)
             self._inserted_blocks.pop(req.req_id, None)
 
+    # ----------------------------------------------------------- disaggregation
+    def handoff_ready(self) -> List[Request]:
+        """Requests whose prompt KV is fully resident and that this
+        instance will not decode itself — the prefill→decode handoff
+        set.  Empty on non-prefill roles (general instances decode their
+        own prefills; decode instances never prefill).  Stranded
+        requests stay eligible: the driver retries them every step and
+        migrates mid-decode once a target frees up (bit-identical)."""
+        if self.role != "prefill":
+            return []
+        return [r for r in self.running if r.prefilled_len >= r.prompt_len]
+
+    def allow_colocated_decode(self, req: Request) -> None:
+        """Lossless fallback when no decode-capable instance can adopt
+        ``req``: let this prefill instance decode it in place rather
+        than stall it (or worse, preempt-and-recompute)."""
+        self.stranded.add(req.req_id)
+
     # --------------------------------------------------------------- migration
     def release(self, req: Request) -> None:
         """Detach a live request WITHOUT resetting its progress — the
@@ -699,6 +745,7 @@ class BatchScheduler:
         self.bm.free(req.req_id)
         self._pending_hashes.pop(req.req_id, None)
         self._inserted_blocks.pop(req.req_id, None)
+        self.stranded.discard(req.req_id)
         self.running.remove(req)
         req.state = RequestState.QUEUED
         self.stats.n_migrated_out += 1
@@ -773,4 +820,5 @@ class BatchScheduler:
         self._pending_hashes.pop(req.req_id, None)
         self._inserted_blocks.pop(req.req_id, None)
         self._provisional.pop(req.req_id, None)
+        self.stranded.discard(req.req_id)
         self.stats.n_finished += 1

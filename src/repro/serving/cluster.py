@@ -131,9 +131,17 @@ class ServingCluster:
         self.config: Optional[ServingConfig] = None
         self.n_migrations = 0
         self.migrated_bytes = 0
+        self.migration_dispatches = 0   # gathered write_blocks calls spent
+        #                                 on migrations (batched: <= requests)
+        # prefill→decode disaggregation accounting (serving/handoff.py)
+        self.n_handoffs = 0
+        self.handoff_bytes = 0
+        self.handoff_dispatches = 0
+        self.n_stranded = 0
         if dispatcher is None:
             dispatcher = TimeSlotDispatcher(
-                [InstanceModel(e.instance_id, e.kv_capacity_tokens)
+                [InstanceModel(e.instance_id, e.kv_capacity_tokens,
+                               role=e.role)
                  for e in self.engines],
                 admit_probe=self.can_admit, tracer=tracer)
         elif getattr(dispatcher, "admit_probe", None) is None:
@@ -225,11 +233,13 @@ class ServingCluster:
         runner0 = PagedModelRunner.from_config(model, params, config,
                                                backend=backend)
 
-        def make_engine(iid: int, runner=None) -> LLMEngine:
+        def make_engine(iid: int, runner=None,
+                        role: Optional[str] = None) -> LLMEngine:
             return LLMEngine.from_config(
                 runner if runner is not None else runner0.clone(), config,
                 instance_id=iid, clock=clock,
-                policy=config.make_policy(orchestrator), tracer=tracer)
+                policy=config.make_policy(orchestrator), tracer=tracer,
+                role=role)
 
         engines = [make_engine(0, runner0)]
         engines += [make_engine(i) for i in range(1, config.n_instances)]
@@ -268,18 +278,40 @@ class ServingCluster:
             e.sched.has_work or e.has_pending for e in self.engines)
 
     # ---------------------------------------------------------------- stepping
-    def step(self, now: Optional[float] = None) -> List[Request]:
-        """One cluster iteration: balance, then run every engine once.
+    ROLE_STEP_ORDER = ("prefill", "general", "decode")
 
-        Pipelined mode issues ALL engine dispatches before the first
-        collect, one worker thread per engine: while engine *i*'s fused
-        iteration computes, the other workers plan/flatten/dispatch (and
-        compute) theirs, and each worker absorbs its own device wait.
-        Collect then runs on this thread in engine order — engine 0's
-        bookkeeping overlaps engines 1..N-1 still computing — and never
-        blocks (tokens arrive host-resident).  Serial mode steps engines
-        one at a time with a forced host sync, reproducing the legacy
-        driver loop exactly."""
+    def _role_groups(self) -> List[List[LLMEngine]]:
+        """Engines grouped by role in step order: prefill groups first so
+        their just-completed prompts hand off at this step's end, decode
+        last so adopted requests decode at the earliest next step.  A
+        flat cluster is exactly one "general" group — the
+        pre-disaggregation step loop, unchanged."""
+        groups = []
+        for role in self.ROLE_STEP_ORDER:
+            g = [e for e in self.engines if e.role == role]
+            if g:
+                groups.append(g)
+        return groups
+
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        """One cluster iteration: balance, then run every role group
+        breadth-first, then sweep prefill→decode handoffs.
+
+        Pipelined mode issues a whole group's engine dispatches before
+        the group's first collect, one worker thread per engine: while
+        engine *i*'s fused iteration computes, the other workers
+        plan/flatten/dispatch (and compute) theirs, and each worker
+        absorbs its own device wait.  Collect then runs on this thread
+        in engine order — engine 0's bookkeeping overlaps engines
+        1..N-1 still computing — and never blocks (tokens arrive
+        host-resident).  Serial mode steps engines one at a time with a
+        forced host sync, reproducing the legacy driver loop exactly.
+
+        After every group has collected (all pools synced — the only
+        legal transfer point), requests that completed prefill on a
+        prefill-role instance are handed to decode-capable instances
+        (``serving/handoff.py``), one gathered donated dispatch per
+        (source, target) batch."""
         now = self.clock() if now is None else now
         finished: List[Request] = []
         if self.autoscaler is not None:
@@ -287,26 +319,46 @@ class ServingCluster:
             # live migration (scale-down drain) is legal
             finished.extend(self.autoscaler.step(self, now))
         self.balancer.tick(now)
-        if self.pipelined and len(self.engines) > 1:
-            if self._pool is None:
-                self._pool = ThreadPoolExecutor(
-                    max_workers=len(self.engines),
-                    thread_name_prefix="cluster-dispatch")
-            futures = [self._pool.submit(self._dispatch_one, e)
-                       for e in self.engines]
-            for e, f in zip(self.engines, futures):
-                f.result()
-                finished.extend(self._collect(e, now))
-        elif self.pipelined:
-            # single engine: nothing to overlap across instances — skip
-            # the worker handoff, keep only the deferred host sync
-            e = self.engines[0]
-            e.dispatch_iteration()
-            finished.extend(self._collect(e, now))
-        else:
-            for e in self.engines:
+        for group in self._role_groups():
+            if self.pipelined and len(group) > 1:
+                if self._pool is None:
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=len(self.engines),
+                        thread_name_prefix="cluster-dispatch")
+                futures = [self._pool.submit(self._dispatch_one, e)
+                           for e in group]
+                for e, f in zip(group, futures):
+                    f.result()
+                    finished.extend(self._collect(e, now))
+            elif self.pipelined:
+                # single engine: nothing to overlap across instances —
+                # skip the worker handoff, keep the deferred host sync
+                e = group[0]
                 e.dispatch_iteration()
-                finished.extend(self._collect(e, now, force_sync=True))
+                finished.extend(self._collect(e, now))
+            else:
+                for e in group:
+                    e.dispatch_iteration()
+                    finished.extend(self._collect(e, now, force_sync=True))
+        if any(e.role == "prefill" for e in self.engines):
+            from repro.serving.handoff import drive_handoffs
+            hs = drive_handoffs(self, now)
+            self.n_handoffs += hs["n_handoffs"]
+            self.handoff_bytes += hs["handoff_bytes"]
+            self.handoff_dispatches += hs["handoff_dispatches"]
+            self.n_stranded += hs["n_stranded"]
+            for e in self.engines:
+                if e.role != "decode" or not e.sched.waiting:
+                    continue
+                # a decode instance's waiting queue can only hold requests
+                # it preempted (admission is adopt-only), and its role gate
+                # would never re-admit them: recompute belongs on a
+                # prefill-capable instance, so route them back through the
+                # balancer (preemption already reset their phase)
+                for req in list(e.sched.waiting):
+                    e.sched.release(req)
+                    self.dispatcher.on_finish(e.instance_id, req.req_id)
+                    self.balancer.enqueue(req)
         return finished
 
     @staticmethod
@@ -348,16 +400,23 @@ class ServingCluster:
         self.autoscaler = autoscaler
 
     def scale_up(self, engine: Optional[LLMEngine] = None,
-                 now: Optional[float] = None) -> int:
+                 now: Optional[float] = None,
+                 role: Optional[str] = None) -> int:
         """Add one instance and start routing to it.  With no ``engine``
         given, the config-derived factory mints one (fresh instance_id,
-        cloned compiled fns, private KV pool).  Returns the instance id."""
+        cloned compiled fns, private KV pool); ``role`` pins the new
+        instance to a disaggregation pool (the autoscaler grows each
+        role pool independently).  Returns the instance id."""
         from repro.core.dispatcher import InstanceModel
         if engine is None:
             assert self._engine_factory is not None, \
                 "scale_up needs an engine_factory (build the cluster via " \
                 "from_config) or an explicit engine"
-            engine = self._engine_factory(max(self._by_id) + 1)
+            if role is None:
+                engine = self._engine_factory(max(self._by_id) + 1)
+            else:
+                engine = self._engine_factory(max(self._by_id) + 1,
+                                              role=role)
         iid = engine.instance_id
         assert iid not in self._by_id, f"instance id {iid} already live"
         assert all(engine.runner is not e.runner for e in self.engines), \
@@ -365,11 +424,12 @@ class ServingCluster:
         self.engines.append(engine)
         self._by_id[iid] = engine
         self.dispatcher.add_instance(
-            InstanceModel(iid, engine.kv_capacity_tokens))
+            InstanceModel(iid, engine.kv_capacity_tokens, role=engine.role))
         self._resize_pool()
         if self.tracer.enabled:
             self.tracer.emit("scale-up", instance_id=iid,
-                             ts=self.clock() if now is None else now)
+                             ts=self.clock() if now is None else now,
+                             n=len(self.engines), role=engine.role)
         return iid
 
     def scale_down(self, instance_id: int,
@@ -383,13 +443,16 @@ class ServingCluster:
            any OOM fence dies with it (a later :meth:`scale_up` reusing
            the id starts unfenced);
         3. waiting (not-yet-prefilled) requests requeue at the balancer;
-        4. running requests live-migrate to the surviving instance with
-           the most free KV (their continued token streams are
-           bit-identical — see ``serving/migration.py``); if none can
-           adopt one, it falls back to preempt-and-requeue (recompute).
+        4. running requests live-migrate to surviving instances — every
+           request bound for the same target moves in ONE gathered
+           donated dispatch (:func:`~repro.serving.migration.migrate_many`;
+           continued token streams are bit-identical — see
+           ``serving/migration.py``); if no instance can adopt one, it
+           falls back to preempt-and-requeue (recompute).
 
         Returns the requests the step-1 collect finished."""
-        from repro.serving.migration import MigrationError, migrate
+        from repro.core.dispatcher import role_accepts
+        from repro.serving.migration import MigrationError, migrate_many
         assert len(self.engines) > 1, "cannot scale below one instance"
         now = self.clock() if now is None else now
         e = self._by_id[instance_id]
@@ -409,24 +472,31 @@ class ServingCluster:
                 continue
             req = e.sched.running[0]
             target = self._pick_migration_target(instance_id, req)
+            snaps = []
             if target is not None:
+                batch = [r for r in e.sched.running
+                         if role_accepts(target.role, r)]
+                d0 = target.runner.n_dispatches
                 try:
-                    snap = migrate(e, target, req, now)
+                    snaps, _ = migrate_many(e, target, batch, now)
                 except MigrationError:
-                    target = None
-            if target is not None:
-                self.n_migrations += 1
-                self.migrated_bytes += snap.n_bytes
-                self.dispatcher.adopt_ramp(
-                    target.instance_id, req.req_id,
-                    removed.ramps.pop(req.req_id, None))
-                if self.tracer.enabled:
-                    self.tracer.emit(
-                        "migrate-candidate", req_id=req.req_id,
-                        agent=req.agent_name, msg_id=req.msg_id, ts=now,
-                        to=target.instance_id, reason="scale-down",
-                        n_bytes=snap.n_bytes)
-            else:
+                    snaps = []
+                if snaps:
+                    self.n_migrations += len(snaps)
+                    self.migrated_bytes += sum(s.n_bytes for s in snaps)
+                    self.migration_dispatches += \
+                        target.runner.n_dispatches - d0
+                for s in snaps:
+                    self.dispatcher.adopt_ramp(
+                        target.instance_id, s.req.req_id,
+                        removed.ramps.pop(s.req.req_id, None))
+                    if self.tracer.enabled:
+                        self.tracer.emit(
+                            "migrate-candidate", req_id=s.req.req_id,
+                            agent=s.req.agent_name, msg_id=s.req.msg_id,
+                            ts=now, to=target.instance_id,
+                            reason="scale-down", n_bytes=s.n_bytes)
+            if not snaps and req in e.sched.running:
                 # nowhere to adopt it: recompute-requeue (progress reset)
                 e.sched.preempt(req)
                 e.sched.release(req)
@@ -438,17 +508,23 @@ class ServingCluster:
         del self._by_id[instance_id]
         self._resize_pool()
         if self.tracer.enabled:
-            self.tracer.emit("scale-down", instance_id=instance_id, ts=now)
+            self.tracer.emit("scale-down", instance_id=instance_id, ts=now,
+                             n=len(self.engines), role=e.role)
         return finished
 
     def _pick_migration_target(self, exclude: int,
                                req: Request) -> Optional[LLMEngine]:
         """Best surviving adopter: most free KV blocks wins; fenced
-        (recently-OOMed) instances lose ties to unfenced ones."""
+        (recently-OOMed) instances lose ties to unfenced ones.  On a
+        role-typed cluster only role-compatible instances qualify (a
+        decode-phase request may not land on a prefill instance, a
+        mid-prefill one never on a decode instance)."""
+        from repro.core.dispatcher import role_accepts
         now = self.clock()
         best, best_key = None, None
         for e in self.engines:
-            if e.instance_id == exclude or not e.sched.can_adopt(req):
+            if e.instance_id == exclude or not role_accepts(e.role, req) \
+                    or not e.sched.can_adopt(req):
                 continue
             key = (not self.dispatcher.is_fenced(e.instance_id, now),
                    e.bm.free_blocks + e.bm.cached_blocks)
@@ -464,19 +540,36 @@ class ServingCluster:
             self._pool = None
 
     # ----------------------------------------------------------------- metrics
+    @staticmethod
+    def metrics_label(e: LLMEngine) -> str:
+        """Snapshot prefix for one engine: role-typed instances carry
+        their role (``prefill1.*``, ``decode2.*``) so downstream
+        attribution (``benchmarks/latency_breakdown.py``) can charge
+        queueing to the pool that caused it; general instances keep the
+        flat ``engine<i>.`` prefix every committed baseline uses."""
+        return (f"engine{e.instance_id}" if e.role == "general"
+                else f"{e.role}{e.instance_id}")
+
     def metrics_snapshot(self) -> dict:
         """The cluster's observable state, flattened to one dict: every
-        engine's counters under ``engine<i>.`` prefixes plus cluster
-        aggregates (``queue_depth``, ``n_instances``, ``n_migrations``,
-        ``migrated_bytes``).  This is the read side of the public
+        engine's counters under per-role instance prefixes
+        (:meth:`metrics_label`) plus cluster aggregates (``queue_depth``,
+        ``n_instances``, ``n_migrations``, ``migrated_bytes``,
+        ``migration_dispatches``, and the handoff counters on
+        disaggregated clusters).  This is the read side of the public
         contract — autoscaler signals and benchmark reports are derived
         from this snapshot, never from cluster internals."""
-        snap = merge_snapshots({f"engine{e.instance_id}": e.metrics_snapshot()
+        snap = merge_snapshots({self.metrics_label(e): e.metrics_snapshot()
                                 for e in self.engines})
         snap["queue_depth"] = float(len(self.balancer.queue))
         snap["n_instances"] = float(len(self.engines))
         snap["n_migrations"] = float(self.n_migrations)
         snap["migrated_bytes"] = float(self.migrated_bytes)
+        snap["migration_dispatches"] = float(self.migration_dispatches)
+        snap["n_handoffs"] = float(self.n_handoffs)
+        snap["handoff_bytes"] = float(self.handoff_bytes)
+        snap["handoff_dispatches"] = float(self.handoff_dispatches)
+        snap["n_stranded"] = float(self.n_stranded)
         return snap
 
     # ------------------------------------------------------------------ drains

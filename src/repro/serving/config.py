@@ -18,8 +18,15 @@ to build from.
   correspondence; ``tests/test_serving_config.py`` asserts the map is
   total, so a knob added to one side cannot silently not exist on the
   other);
-* legacy per-class kwargs keep working for one release behind
-  deprecation shims (``Workflow(num_blocks=...)`` etc.).
+* legacy per-class kwargs are gone: ``Workflow(num_blocks=...)`` raises
+  ``TypeError`` pointing here (the one-release deprecation shim was
+  removed after PR 8).
+
+Role-typed topology (prefill/decode disaggregation) lives here too:
+``roles`` assigns each instance a role — ``"prefill"`` instances run
+chunked prefill only and hand finished prompts off, ``"decode"``
+instances admit only handed-off requests, ``"general"`` instances do
+both (the pre-disaggregation behaviour, and the default).
 """
 from __future__ import annotations
 
@@ -45,7 +52,10 @@ SIM_FIELD_MAP = {
     "tracing": "tracing",
     "model_parallel": "tp_degree",
     "n_instances": "n_instances",
+    "roles": "roles",
 }
+
+ROLES = ("prefill", "decode", "general")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +91,11 @@ class ServingConfig:
     # -- topology -----------------------------------------------------------
     model_parallel: int = 1
     n_instances: int = 1
+    # roles[i] is instance i's role ("prefill"/"decode"/"general"); None
+    # means every instance is "general" — the flat, pre-disaggregation
+    # cluster.  A topology with any "prefill" instance must contain a
+    # decode-capable one ("decode" or "general") to hand off to.
+    roles: Optional[tuple] = None
 
     def __post_init__(self):
         assert self.num_blocks > 0 and self.block_size > 0
@@ -88,11 +103,32 @@ class ServingConfig:
         assert self.model_parallel >= 1
         assert (self.prefill_chunk_tokens is None
                 or self.prefill_chunk_tokens > 0)
+        if self.roles is not None:
+            # normalize list -> tuple so the frozen config stays hashable
+            object.__setattr__(self, "roles", tuple(self.roles))
+            assert len(self.roles) == self.n_instances, \
+                f"roles {self.roles} must name all {self.n_instances} instances"
+            bad = [r for r in self.roles if r not in ROLES]
+            assert not bad, f"unknown roles {bad}; choose from {ROLES}"
+            if "prefill" in self.roles:
+                assert any(r in ("decode", "general") for r in self.roles), \
+                    "prefill instances need a decode-capable handoff target"
 
     # ------------------------------------------------------------- derived
     @property
     def kv_capacity_tokens(self) -> int:
         return self.num_blocks * self.block_size
+
+    def role_of(self, instance_id: int) -> str:
+        """Role of instance ``instance_id`` ("general" on flat clusters,
+        and for autoscaled instances minted past the declared topology)."""
+        if self.roles is None or instance_id >= len(self.roles):
+            return "general"
+        return self.roles[instance_id]
+
+    @property
+    def disaggregated(self) -> bool:
+        return self.roles is not None and "prefill" in self.roles
 
     @property
     def ragged_native(self) -> bool:

@@ -775,7 +775,8 @@ class LLMEngine:
                  policy: Optional[SchedulerPolicy] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  fused_iteration: bool = True,
-                 tracer: Tracer = NULL_TRACER):
+                 tracer: Tracer = NULL_TRACER,
+                 role: str = "general"):
         self.runner = runner
         self.fused_iteration = fused_iteration
         self._pending: Optional[Tuple[IterationBatch, TokenBuffer]] = None
@@ -795,20 +796,28 @@ class LLMEngine:
             max_batch=runner.max_batch,
             prefill_chunk_tokens=prefill_chunk_tokens,
             on_preempt=lambda r: self._next_tok.pop(r.req_id, None),
-            tracer=tracer, instance_id=instance_id)
+            tracer=tracer, instance_id=instance_id, role=role)
 
     @classmethod
     def from_config(cls, runner: PagedModelRunner, config, *,
                     instance_id: int = 0, eos_token: int = -1,
                     clock: Callable[[], float] = time.monotonic,
                     policy: Optional[SchedulerPolicy] = None,
-                    tracer: Tracer = NULL_TRACER) -> "LLMEngine":
+                    tracer: Tracer = NULL_TRACER,
+                    role: Optional[str] = None) -> "LLMEngine":
         """Build an engine from a :class:`~repro.serving.config.ServingConfig`
         (identity, clock, policy object and tracer are runtime wiring, not
-        configuration)."""
+        configuration).  ``role`` overrides ``config.role_of(instance_id)``
+        — the autoscaler uses it to mint instances for a specific pool."""
+        if role is None:
+            role = config.role_of(instance_id)
         return cls(runner, instance_id=instance_id, eos_token=eos_token,
-                   clock=clock, policy=policy, tracer=tracer,
+                   clock=clock, policy=policy, tracer=tracer, role=role,
                    **config.engine_kwargs())
+
+    @property
+    def role(self) -> str:
+        return self.sched.role
 
     @property
     def waiting(self) -> List[Request]:

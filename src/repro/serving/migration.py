@@ -36,6 +36,13 @@ too), so a migration moves exactly the gathered block bytes and neither
 side ever materializes a second pool buffer.  Both calls must run
 between synced iterations (no in-flight dispatch), which the cluster's
 step loop guarantees.
+
+**Batched transfers** (:func:`migrate_many`): N requests moving to one
+target concatenate their non-cached block slices along the block axis
+and land in ONE gathered donated ``write_blocks`` dispatch instead of
+N — scale-down drains and multi-request prefill→decode handoffs
+(``serving/handoff.py``) pay one dispatch per (source, target) pair,
+not one per request.
 """
 from __future__ import annotations
 
@@ -65,6 +72,8 @@ class RequestSnapshot:
     pending_token: Optional[int]   # sampled-but-not-fed token (None mid-prefill)
     source_instance_id: int
     source_pool_address: object    # donated-pool witness at snapshot time
+    n_cached_blocks: int = 0       # filled at restore: blocks served from the
+    #                                target's prefix cache instead of the wire
 
     @property
     def n_blocks(self) -> int:
@@ -141,7 +150,65 @@ def restore_request(engine: LLMEngine, snap: RequestSnapshot,
     if snap.pending_token is not None:
         engine.set_pending_token(req.req_id, snap.pending_token)
     req.instance_id = engine.instance_id
+    snap.n_cached_blocks = len(cached)
     return len(cached)
+
+
+def migrate_many(source: LLMEngine, target: LLMEngine,
+                 reqs: List[Request],
+                 now: Optional[float] = None,
+                 ) -> tuple:
+    """Migrate every feasible request of ``reqs`` from ``source`` to
+    ``target`` with ONE gathered donated ``write_blocks`` dispatch.
+
+    Each request is probed (``can_adopt``), snapshotted, cache-matched
+    and adopted individually — adoption updates the target's block
+    accounting, so feasibility stays accurate as the batch grows — but
+    the KV bytes of the whole batch are concatenated along the block
+    axis and written in a single dispatch.  Requests the target cannot
+    take are skipped untouched (still running on the source).
+
+    Returns ``(snapshots, skipped)``: snapshots of the migrated requests
+    (sum their ``n_bytes`` for transfer accounting; the whole batch cost
+    at most one dispatch) and the requests left behind."""
+    if target is source:
+        raise MigrationError("migration target must differ from source")
+    assert not target.has_pending, \
+        "migrate_many requires a synced target (collect the iteration first)"
+    now = target.clock() if now is None else now
+    bm = target.bm
+    snaps: List[RequestSnapshot] = []
+    skipped: List[Request] = []
+    kv_parts: List[np.ndarray] = []
+    table_parts: List[int] = []
+    addr_before = target.runner.pool_address()
+    for req in list(reqs):
+        if not target.sched.can_adopt(req):
+            skipped.append(req)
+            continue
+        snap = snapshot_request(source, req)
+        n_res_blocks = bm.blocks_needed(snap.n_resident_tokens)
+        cached: List[int] = []
+        if target.prefix_cache is not None and snap.hashes:
+            matchable = min(len(snap.hashes),
+                            snap.n_resident_tokens // bm.block_size)
+            cached = target.prefix_cache.match(snap.hashes[:matchable], bm)
+        table = target.sched.adopt(req, now, cached=cached,
+                                   hashes=snap.hashes)
+        if n_res_blocks > len(cached):
+            kv_parts.append(snap.kv[:, :, len(cached):n_res_blocks])
+            table_parts.extend(table[len(cached):n_res_blocks])
+        if snap.pending_token is not None:
+            target.set_pending_token(req.req_id, snap.pending_token)
+        req.instance_id = target.instance_id
+        snap.n_cached_blocks = len(cached)
+        snaps.append(snap)
+    if kv_parts:
+        target.runner.write_blocks(np.concatenate(kv_parts, axis=2),
+                                   table_parts)
+    assert target.runner.pool_address() == addr_before, \
+        "gathered write_blocks must donate the target pool in place"
+    return snaps, skipped
 
 
 def migrate(source: LLMEngine, target: LLMEngine, req: Request,

@@ -34,6 +34,19 @@ class RequestState(enum.Enum):
     FINISHED = "finished"
 
 
+class RequestPhase(enum.Enum):
+    """Where the request sits in its compute lifecycle — orthogonal to
+    :class:`RequestState` (a PREFILL request can be queued, waiting, or
+    mid-chunked-prefill).  Role-typed dispatch routes on this: PREFILL
+    work may only land on ``prefill``/``general`` instances, DECODE work
+    on ``decode``/``general`` ones.  The scheduler flips PREFILL→DECODE
+    when the last prompt chunk is composed, and back on
+    recompute-preemption (resident KV is dropped, the prompt must be
+    re-prefilled)."""
+    PREFILL = "prefill"        # prompt KV not yet fully resident
+    DECODE = "decode"          # prompt resident; generating tokens
+
+
 @dataclasses.dataclass
 class Request:
     # --- identity / Kairos system identifiers (§4.1) ------------------------
@@ -72,6 +85,7 @@ class Request:
 
     # --- runtime state --------------------------------------------------------
     state: RequestState = RequestState.QUEUED
+    phase: RequestPhase = RequestPhase.PREFILL
     prefilled_len: int = 0          # prompt tokens whose KV is resident
     #                                 (cached prefix + executed prefill
     #                                 chunks); == prompt_len once decodable

@@ -122,6 +122,13 @@ class CostModel:
         """Per-request decode speed at a typical batch (Eq. 1 `k`)."""
         return 1.0 / self.iteration_time(typical_batch, 0)
 
+    def transfer_time(self, n_tokens: int) -> float:
+        """Prefill→decode handoff wire time for a request with
+        ``n_tokens`` resident KV: a gathered pool-to-pool block copy
+        (intra-host disaggregation), so the bytes move at HBM rate —
+        read on the source + write on the target."""
+        return 2 * n_tokens * self.kv_bytes_per_token / (self.hbm_gbps * 1e9)
+
 
 LLAMA3_8B = CostModel("llama3-8b")
 # 13B-class: ~1.7x per-token cost, same structure (§7.5 scalability study);

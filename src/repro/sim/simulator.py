@@ -32,6 +32,7 @@ from repro.core import (
     TimeSlotDispatcher,
     TopoScheduler,
 )
+from repro.core.dispatcher import role_accepts
 from repro.core.orchestrator import HardwareProfile
 from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.autoscaler import (
@@ -79,6 +80,7 @@ class SimInstance:
                  donate_pool: bool = True,
                  ragged_native: bool = True,
                  tp_degree: int = 1,
+                 role: str = "general",
                  tracer: Tracer = NULL_TRACER):
         self.instance_id = instance_id
         self.cost = cost
@@ -97,7 +99,13 @@ class SimInstance:
             self.bm, policy=policy, prefix_cache=self.cache,
             matcher=KeyPrefixMatcher(), max_running=max_batch,
             prefill_chunk_tokens=prefill_chunk_tokens,
-            tracer=tracer, instance_id=instance_id)
+            tracer=tracer, instance_id=instance_id, role=role)
+
+    @property
+    def role(self) -> str:
+        """Disaggregation role — lives on the shared scheduler, exactly
+        like the real engine's."""
+        return self.sched.role
 
     # ------------------------------------------------------------------ intake
     def submit(self, req: Request):
@@ -265,6 +273,21 @@ class SimConfig:
     # SimInstances at decision_period_s cadence; retirement drains via
     # the scheduler-level release/adopt migration (progress preserved)
     autoscale: Optional[AutoscalerConfig] = None
+    # role topology (prefill/decode disaggregation), one role per
+    # instance id; None = every instance "general" (flat cluster).
+    # Mirrors ServingConfig.roles: prefill instances run chunked prefill
+    # only and hand completed prompts to decode-capable instances via
+    # the scheduler-level release/adopt (the sim analogue of the
+    # block-granular KV handoff), priced by CostModel.transfer_time
+    roles: Optional[tuple] = None
+
+    def role_of(self, instance_id: int) -> str:
+        """Role of an instance id; ids past the declared topology
+        (autoscaled pool instances) default to ``general`` — same rule
+        as ``ServingConfig.role_of``."""
+        if self.roles is None or instance_id >= len(self.roles):
+            return "general"
+        return self.roles[instance_id]
 
     @classmethod
     def from_serving_config(cls, serving: ServingConfig, apps: List[AppSpec],
@@ -287,6 +310,7 @@ class SimConfig:
             ragged_native=serving.ragged_native,
             tp_degree=serving.model_parallel,
             tracing=serving.tracing,
+            roles=serving.roles,
         )
         base.update(overrides)
         return cls(**base)
@@ -315,6 +339,8 @@ class SimResults:
     prefill_tokens_saved: int = 0
     n_migrated: int = 0               # live migrations during elastic drains
     instance_seconds: float = 0.0     # capacity actually paid for
+    n_handoffs: int = 0               # prefill→decode transfers completed
+    n_stranded: int = 0               # handoffs refused -> colocated decode
     scale_history: List[Tuple[float, str, int, int]] = \
         dataclasses.field(default_factory=list)
 
@@ -344,6 +370,8 @@ class SimResults:
             "prefill_savings": self.prefill_savings,
             "n_migrated": float(self.n_migrated),
             "instance_seconds": self.instance_seconds,
+            "n_handoffs": float(self.n_handoffs),
+            "n_stranded": float(self.n_stranded),
         }
 
 
@@ -366,7 +394,8 @@ class Simulation:
         self.tracer: Tracer = Tracer() if cfg.tracing else NULL_TRACER
         self.orch = Orchestrator(hardware=hw, prefix_caching=cfg.prefix_caching,
                                  tracer=self.tracer)
-        models = [InstanceModel(i, cfg.kv_capacity_tokens)
+        models = [InstanceModel(i, cfg.kv_capacity_tokens,
+                                role=cfg.role_of(i))
                   for i in range(cfg.n_instances)]
         self.scheduler, self.dispatcher, strict = self._make_policy(cfg.policy, models)
         self._inst_policy = (self.scheduler
@@ -388,12 +417,15 @@ class Simulation:
             strict_head=strict, tracer=self.tracer)
         self.workflows: Dict[str, WorkflowState] = {}
         self.finished_requests: List[Request] = []
+        self.n_handoffs = 0
+        self.n_stranded = 0
         self._events: List[Tuple[float, int, str, object]] = []
         self._eseq = itertools.count()
         self._msg_counter = itertools.count()
         self._balancer_armed = False
 
-    def _make_instance(self, iid: int) -> SimInstance:
+    def _make_instance(self, iid: int,
+                       role: Optional[str] = None) -> SimInstance:
         cfg = self.cfg
         return SimInstance(
             iid, cfg.cost, cfg.kv_capacity_tokens, block_size=cfg.block_size,
@@ -402,7 +434,9 @@ class Simulation:
             prefill_chunk_tokens=cfg.prefill_chunk_tokens,
             fused_iteration=cfg.fused_iteration,
             donate_pool=cfg.donate_pool, ragged_native=cfg.ragged_native,
-            tp_degree=cfg.tp_degree, tracer=self.tracer)
+            tp_degree=cfg.tp_degree,
+            role=cfg.role_of(iid) if role is None else role,
+            tracer=self.tracer)
 
     # ------------------------------------------------------------------ policy
     def _make_policy(self, policy: str, models):
@@ -450,27 +484,34 @@ class Simulation:
             self._push(t, "balancer", None)
 
     # -------------------------------------------------------------- elasticity
-    def _signals(self, now: float) -> ClusterSignals:
+    def _signals(self, now: float,
+                 role: Optional[str] = None) -> ClusterSignals:
         inst = [InstanceSignal(
             instance_id=i.instance_id,
             kv_used_frac=i.bm.hard_used_blocks / i.bm.num_blocks,
             fenced=now < self.dispatcher.instances[i.instance_id].fenced_until,
             load=len(i.running) + len(i.waiting))
-            for i in self.instances.values()]
-        return ClusterSignals(now=now, queue_depth=self.balancer.queued,
-                              instances=inst)
+            for i in self.instances.values()
+            if role is None or i.role == role]
+        if role is None:
+            depth = self.balancer.queued
+        else:
+            depth = sum(1 for r in self.balancer.queue
+                        if role_accepts(role, r))
+        return ClusterSignals(now=now, queue_depth=depth, instances=inst)
 
-    def _scale_up(self, now: float):
+    def _scale_up(self, now: float, role: Optional[str] = None):
         iid = max(self.instances) + 1
-        inst = self._make_instance(iid)
+        inst = self._make_instance(iid, role=role)
         self.instances[iid] = inst
         self._all_instances.append(inst)
         self._spawn_time[iid] = now
         self.dispatcher.add_instance(
-            InstanceModel(iid, self.cfg.kv_capacity_tokens))
+            InstanceModel(iid, self.cfg.kv_capacity_tokens, role=inst.role))
         self.autoscaler.note_action(now, "up", iid, len(self.instances))
         if self.tracer.enabled:
-            self.tracer.emit("scale-up", instance_id=iid, ts=now)
+            self.tracer.emit("scale-up", instance_id=iid, ts=now,
+                             n=len(self.instances), role=inst.role)
 
     def _scale_down(self, victim: int, now: float):
         """Retire a SimInstance by draining it through migration: the sim
@@ -490,7 +531,7 @@ class Simulation:
             req = inst.sched.running[0]
             target = min(
                 (i for i in self.instances.values()
-                 if i.sched.can_adopt(req)),
+                 if role_accepts(i.role, req) and i.sched.can_adopt(req)),
                 key=lambda i: i.bm.hard_used_blocks, default=None)
             if target is not None:
                 inst.sched.release(req)
@@ -514,18 +555,78 @@ class Simulation:
                 self.balancer.enqueue(req)
         self.autoscaler.note_action(now, "down", victim, len(self.instances))
         if self.tracer.enabled:
-            self.tracer.emit("scale-down", instance_id=victim, ts=now)
+            self.tracer.emit("scale-down", instance_id=victim, ts=now,
+                             n=len(self.instances), role=removed.role)
         self._arm_balancer(now)
 
     def _autoscale_tick(self, now: float):
-        action = self.autoscaler.decide(self._signals(now))
-        if action is None:
+        """Mirror of ``Autoscaler.step``: one decision per role pool,
+        each from role-split signals (a flat sim is one general pool)."""
+        roles = {i.role for i in self.instances.values()}
+        pools = [r for r in ("prefill", "decode", "general")
+                 if r in roles] or ["general"]
+        split = pools != ["general"]
+        for role in pools:
+            action = self.autoscaler.decide(
+                self._signals(now, role=role if split else None), role=role)
+            if action is None:
+                continue
+            kind, victim = action
+            if kind == "up":
+                self._scale_up(now, role=role if split else None)
+            elif sum(1 for i in self.instances.values()
+                     if not split or i.role == role) > 1:
+                self._scale_down(victim, now)
+
+    def _sim_handoffs(self, src: SimInstance, now: float):
+        """Prefill→decode handoff, sim analogue of
+        ``serving.handoff.drive_handoffs``: scheduler-level
+        release/adopt (same progress-preserving path as ``_scale_down``,
+        no KV bytes to move) with the wire time priced by
+        ``CostModel.transfer_time``; refused requests are stranded for
+        colocated decode and retried every sweep."""
+        ready = src.sched.handoff_ready()
+        if not ready:
             return
-        kind, victim = action
-        if kind == "up":
-            self._scale_up(now)
-        elif len(self.instances) > 1:
-            self._scale_down(victim, now)
+        targets = sorted(
+            (i for i in self.instances.values()
+             if i is not src and i.role != "prefill"
+             and not (now < self.dispatcher.instances[
+                 i.instance_id].fenced_until)),
+            key=lambda i: (i.role != "decode",
+                           -(i.bm.free_blocks + i.bm.cached_blocks)))
+        for req in ready:
+            tgt = next((t for t in targets if t.sched.can_adopt(req)), None)
+            if tgt is None:
+                if req.req_id not in src.sched.stranded:
+                    self.n_stranded += 1
+                    src.sched.allow_colocated_decode(req)
+                continue
+            n_resident = req.prefilled_len + req.output_len
+            dt = self.cfg.cost.transfer_time(n_resident)
+            src.sched.release(req)
+            tgt.sched.adopt(req, now + dt)
+            req.instance_id = tgt.instance_id
+            self.dispatcher.adopt_ramp(
+                tgt.instance_id, req.req_id,
+                self.dispatcher.instances[src.instance_id].ramps.pop(
+                    req.req_id, None))
+            self.n_handoffs += 1
+            if not tgt.busy:
+                self._push(now + dt, "instance_step", tgt.instance_id)
+                tgt.busy = True
+            if self.tracer.enabled:
+                self.tracer.emit(
+                    "handoff-start", req_id=req.req_id,
+                    instance_id=src.instance_id, agent=req.agent_name,
+                    msg_id=req.msg_id, ts=now, to=tgt.instance_id,
+                    n_blocks=src.bm.blocks_needed(n_resident),
+                    n_bytes=n_resident * self.cfg.cost.kv_bytes_per_token)
+                self.tracer.emit(
+                    "handoff-complete", req_id=req.req_id,
+                    instance_id=tgt.instance_id, agent=req.agent_name,
+                    msg_id=req.msg_id, ts=now + dt, src=src.instance_id,
+                    cached=0)
 
     # ------------------------------------------------------------------ agents
     def _request_rng(self, wf: WorkflowState, agent: str) -> np.random.Generator:
@@ -624,6 +725,20 @@ class Simulation:
                 inst = self.instances.get(payload)
                 if inst is None:
                     continue   # instance was scaled away; its work moved
+                if inst.role == "prefill":
+                    # between iterations — the only legal transfer point,
+                    # same as the real cluster's post-collect sweep
+                    self._sim_handoffs(inst, t)
+                elif inst.role == "decode" and inst.sched.waiting:
+                    # decode-side preemptions re-enter via the balancer
+                    # (phase reset by the preemption) — the role gate
+                    # would never re-admit them locally
+                    for req in list(inst.sched.waiting):
+                        inst.sched.release(req)
+                        self.dispatcher.instances[
+                            inst.instance_id].ramps.pop(req.req_id, None)
+                        self.balancer.enqueue(req)
+                    self._arm_balancer(t)
                 finished, dt = inst.step(t)
                 if dt is None:
                     inst.busy = False
@@ -656,6 +771,8 @@ class Simulation:
             n_migrated=sum(i.sched.stats.n_migrated_in
                            for i in self._all_instances),
             instance_seconds=self.instance_seconds,
+            n_handoffs=self.n_handoffs,
+            n_stranded=self.n_stranded,
             scale_history=(list(self.autoscaler.history)
                            if self.autoscaler else []),
         )

@@ -1,0 +1,453 @@
+"""Prefill/decode disaggregation (serving/handoff.py + role-typed stack).
+
+The contract under test: a role-typed drain — prefill instances running
+chunked prefill only, decode instances admitting work exclusively
+through block-granular KV handoff — produces token streams
+BIT-IDENTICAL to a colocated drain of the same workload, while each
+(source, target) handoff batch costs at most one gathered donated
+``write_blocks`` dispatch and neither pool buffer ever moves.  Around
+that: mid-block prefill cuts, COW/warm-cache adoption on the decode
+side, lossless colocated-decode fallback when the decode pool is full,
+role-aware admission at the scheduler and every dispatcher, and the
+batched ``migrate_many`` single-dispatch invariant.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dispatcher import (
+    InstanceModel,
+    RoundRobinDispatcher,
+    TimeSlotDispatcher,
+    role_accepts,
+)
+from repro.core.memory_model import MemoryRamp
+from repro.obs.trace import NULL_TRACER, Tracer
+from repro.serving import (
+    LLMEngine,
+    PagedModelRunner,
+    Request,
+    RequestPhase,
+    drive_handoffs,
+    handoff,
+    migrate_many,
+    reset_request_ids,
+)
+from repro.serving.handoff import HandoffError
+
+
+@pytest.fixture(scope="module")
+def runner0():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return PagedModelRunner(model, params, num_blocks=64, block_size=8,
+                            max_batch=4)
+
+
+def _engine(runner0, iid, *, role="general", cache=True, chunk=None,
+            num_blocks=None):
+    if num_blocks is not None:
+        r = PagedModelRunner(runner0.model, runner0.params,
+                             num_blocks=num_blocks, block_size=8,
+                             max_batch=4)
+    else:
+        r = runner0.clone()
+    return LLMEngine(r, instance_id=iid, max_batch=4, role=role,
+                     enable_prefix_cache=cache, prefill_chunk_tokens=chunk)
+
+
+def _reqs(n=4, max_new=12, sys_len=16, uniq=9, seed=5, tag="m"):
+    rng = np.random.default_rng(seed)
+    sys_toks = rng.integers(0, 500, sys_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        toks = np.concatenate(
+            [sys_toks, rng.integers(0, 500, uniq + i).astype(np.int32)])
+        out.append(Request(agent_name="a", msg_id=f"{tag}{i}",
+                           prompt_len=len(toks), prompt_tokens=toks,
+                           max_new_tokens=max_new))
+    return out
+
+
+def _tokens(done):
+    return {q.msg_id: list(q.output_tokens) for q in done}
+
+
+def _baseline(runner0, req_kw=None, *, cache=True, chunk=None):
+    reset_request_ids()
+    e = _engine(runner0, 0, cache=cache, chunk=chunk)
+    for q in _reqs(**(req_kw or {})):
+        e.submit(q)
+    done = []
+    for _ in range(4000):
+        done.extend(e.step())
+        if not e.sched.has_work:
+            return _tokens(done)
+    raise AssertionError("baseline drain did not converge")
+
+
+class _MiniCluster:
+    """Just enough cluster surface for drive_handoffs: the engine list,
+    a tracer, and an is_fenced probe (never fenced here)."""
+
+    class _Dispatcher:
+        @staticmethod
+        def is_fenced(instance_id, now):
+            return False
+
+    def __init__(self, engines, tracer=NULL_TRACER):
+        self.engines = list(engines)
+        self.tracer = tracer
+        self.dispatcher = self._Dispatcher()
+
+
+def _disagg_drain(cluster, max_steps=4000):
+    """Step every engine then sweep handoffs, until drained.  Returns
+    (finished requests, accumulated sweep stats)."""
+    done = []
+    totals = {"n_handoffs": 0, "handoff_bytes": 0,
+              "handoff_dispatches": 0, "n_stranded": 0}
+    for it in range(max_steps):
+        for e in cluster.engines:
+            done.extend(e.step())
+        hs = drive_handoffs(cluster, now=float(it))
+        assert hs["handoff_dispatches"] <= hs["n_handoffs"], \
+            "batching must never spend more dispatches than handoffs"
+        for k in totals:
+            totals[k] += hs[k]
+        if not any(e.sched.has_work for e in cluster.engines):
+            return done, totals
+    raise AssertionError("disaggregated drain did not converge")
+
+
+# ---------------------------------------------------------------------------
+# the tentpole oracle: disaggregated == colocated, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [None, 6])
+def test_disagg_drain_token_identical(runner0, chunk):
+    base = _baseline(runner0, chunk=chunk)
+    reset_request_ids()
+    e0 = _engine(runner0, 0, role="prefill", chunk=chunk)
+    e1 = _engine(runner0, 1, role="decode", chunk=chunk)
+    a0, a1 = e0.runner.pool_address(), e1.runner.pool_address()
+    cluster = _MiniCluster([e0, e1])
+    for q in _reqs():
+        e0.submit(q)
+    done, totals = _disagg_drain(cluster)
+    assert _tokens(done) == base, "disaggregation must not change tokens"
+    assert totals["n_handoffs"] == 4 and totals["n_stranded"] == 0
+    assert all(q.instance_id == 1 for q in done), \
+        "every request must finish on the decode instance"
+    if a0 is not None:
+        assert e0.runner.pool_address() == a0
+        assert e1.runner.pool_address() == a1
+
+
+def test_mid_block_prefill_cut_handoff(runner0):
+    """Chunk budget 6 on block size 8: prefill cuts land inside blocks
+    and the prompts (37..39 tokens) end mid-block, so every handoff
+    moves a partially-filled final block.  Streams must still match."""
+    req_kw = dict(n=3, uniq=21, max_new=8)
+    base = _baseline(runner0, req_kw, chunk=6)
+    reset_request_ids()
+    e0 = _engine(runner0, 0, role="prefill", chunk=6)
+    e1 = _engine(runner0, 1, role="decode", chunk=6)
+    cluster = _MiniCluster([e0, e1])
+    reqs = _reqs(**req_kw)
+    assert all(q.prompt_len % 8 for q in reqs), "want mid-block prompt ends"
+    for q in reqs:
+        e0.submit(q)
+    # requests still mid-prefill never appear in handoff_ready
+    e0.step()
+    mid = [q for q in e0.sched.running if q.prefilled_len < q.prompt_len]
+    assert mid and all(q.phase is RequestPhase.PREFILL for q in mid)
+    assert not ({q.req_id for q in e0.sched.handoff_ready()}
+                & {q.req_id for q in mid})
+    done, totals = _disagg_drain(cluster)
+    assert _tokens(done) == base
+    assert totals["n_handoffs"] == 3
+
+
+def test_cow_shared_prefix_adopted_on_decode_side(runner0):
+    """Wave 1's handoffs re-register the shared prefix in the decode
+    instance's cache; wave 2's handoffs then adopt those blocks instead
+    of re-sending them over the wire (trace: ``cached > 0``)."""
+    reset_request_ids()
+    e0 = _engine(runner0, 0, role="prefill")
+    e1 = _engine(runner0, 1, role="decode")
+    tracer = Tracer(clock=lambda: 0.0)
+    cluster = _MiniCluster([e0, e1], tracer=tracer)
+    for q in _reqs(n=2, tag="w1-"):
+        e0.submit(q)
+    done, _ = _disagg_drain(cluster)
+    for q in _reqs(n=2, tag="w2-"):
+        e0.submit(q)
+    done2, totals2 = _disagg_drain(cluster)
+    assert totals2["n_handoffs"] == 2
+    evts = [e for e in tracer.events() if e.kind == "handoff-complete"]
+    starts = [e for e in tracer.events() if e.kind == "handoff-start"]
+    assert len(evts) == len(starts) == 4
+    assert {e.req_id for e in evts} == {e.req_id for e in starts}
+    assert all(e.instance_id == 1 and e.data["src"] == 0 for e in evts)
+    assert all(s.data["to"] == 1 and s.data["n_blocks"] > 0
+               and s.data["n_bytes"] > 0 for s in starts)
+    wave2 = [e for e in evts if e.msg_id.startswith("w2-")]
+    assert any(e.data["cached"] > 0 for e in wave2), \
+        "wave 2 should adopt the prefix wave 1 registered on the target"
+    # identical to running both waves colocated on one cached engine
+    reset_request_ids()
+    eb = _engine(runner0, 0)
+    base = {}
+    for tag in ("w1-", "w2-"):
+        for q in _reqs(n=2, tag=tag):
+            eb.submit(q)
+        acc = []
+        for _ in range(4000):
+            acc.extend(eb.step())
+            if not eb.sched.has_work:
+                break
+        base.update(_tokens(acc))
+    assert {**_tokens(done), **_tokens(done2)} == base
+
+
+def test_handoff_refused_full_decode_pool_decodes_colocated(runner0):
+    """A decode pool too small to adopt anything strands every request:
+    the prefill instance decodes them itself, losslessly, and the driver
+    does not re-count already-stranded requests."""
+    base = _baseline(runner0)
+    reset_request_ids()
+    e0 = _engine(runner0, 0, role="prefill")
+    e1 = _engine(runner0, 1, role="decode", num_blocks=2)
+    cluster = _MiniCluster([e0, e1])
+    for q in _reqs():
+        e0.submit(q)
+    done, totals = _disagg_drain(cluster)
+    assert totals["n_handoffs"] == 0
+    assert totals["n_stranded"] == 4, "each request stranded exactly once"
+    assert _tokens(done) == base, "colocated fallback must be lossless"
+    assert all(q.instance_id == 0 for q in done)
+
+
+def test_stranded_request_hands_off_once_capacity_frees(runner0):
+    """Stranded requests stay in handoff_ready: when the decode pool
+    frees up mid-decode, the retry migrates them (mid-decode transfers
+    are bit-identical, inherited from the migration layer)."""
+    base = _baseline(runner0, dict(n=2, max_new=10))
+    reset_request_ids()
+    e0 = _engine(runner0, 0, role="prefill")
+    e1 = _engine(runner0, 1, role="decode", num_blocks=2)
+    cluster = _MiniCluster([e0, e1])
+    for q in _reqs(n=2, max_new=10):
+        e0.submit(q)
+    done = []
+    # strand both, decode a few colocated iterations
+    for it in range(4):
+        for e in cluster.engines:
+            done.extend(e.step())
+        drive_handoffs(cluster, now=float(it))
+    assert e0.sched.stranded and all(q.output_len > 0
+                                     for q in e0.sched.running)
+    # capacity appears: swap in a decode instance with a real pool
+    e2 = _engine(runner0, 2, role="decode")
+    cluster.engines[1] = e2
+    hs = drive_handoffs(cluster, now=100.0)
+    assert hs["n_handoffs"] == 2, "retry must move the stranded requests"
+    assert not e0.sched.stranded, "handoff clears the stranded set"
+    for it in range(4000):
+        for e in cluster.engines:
+            done.extend(e.step())
+        if not any(e.sched.has_work for e in cluster.engines):
+            break
+    assert _tokens(done) == base
+
+
+def _run_cluster(runner0, roles, *, num_blocks=28, n=6, max_new=8):
+    """Full ServingCluster drain under prefix-cache + chunked-prefill +
+    preemption pressure (pool sized to force evictions)."""
+    from repro.core import Orchestrator
+    from repro.core.orchestrator import HardwareProfile
+    from repro.serving import ServingCluster, ServingConfig
+    reset_request_ids()
+    cfg = ServingConfig(num_blocks=num_blocks, block_size=8, max_batch=3,
+                        n_instances=2, prefix_caching=True,
+                        prefill_chunk_tokens=16, policy="kairos",
+                        roles=roles)
+    orch = Orchestrator(hardware=HardwareProfile(
+        decode_tok_per_s=20.0, kv_capacity_tokens=cfg.kv_capacity_tokens))
+    cluster = ServingCluster.from_config(runner0.model, runner0.params,
+                                         orch, cfg)
+    rng = np.random.default_rng(3)
+    sys_toks = rng.integers(0, 500, 16).astype(np.int32)
+    for i in range(n):
+        toks = np.concatenate(
+            [sys_toks, rng.integers(0, 500, 8 + 3 * i).astype(np.int32)])
+        cluster.submit(Request(agent_name="a", msg_id=f"c{i}",
+                               prompt_len=len(toks), prompt_tokens=toks,
+                               max_new_tokens=max_new,
+                               arrival_time=0.01 * i))
+    done = cluster.drain()
+    snap = cluster.metrics_snapshot()
+    cluster.close()
+    assert len(done) == n, "drain must finish every request"
+    return _tokens(done), snap
+
+
+def test_serving_cluster_disagg_drain_matches_colocated(runner0):
+    """The tentpole acceptance oracle at cluster level: 1 prefill + 1
+    decode fully drains bit-identically to the colocated 2-instance
+    baseline, with the handoff/migration counters visible in the
+    snapshot under role-prefixed labels."""
+    base, base_snap = _run_cluster(runner0, None)
+    disagg, snap = _run_cluster(runner0, ("prefill", "decode"))
+    assert disagg == base, "disaggregated drain must be token-identical"
+    assert snap["n_handoffs"] >= 6.0
+    assert snap["handoff_dispatches"] <= snap["n_handoffs"]
+    assert snap["handoff_bytes"] > 0.0
+    assert any(k.startswith("prefill0.") for k in snap)
+    assert any(k.startswith("decode1.") for k in snap)
+    assert any(k.startswith("engine0.") for k in base_snap), \
+        "flat clusters keep the engine<i> prefix baselines rely on"
+    # per-role attribution: admissions land on the prefill pool, every
+    # finish on the decode pool (flat snapshots roll up as "general")
+    from repro.obs import rollup_by_role
+    roles = rollup_by_role(snap)
+    assert {"prefill", "decode"} <= set(roles)
+    assert roles["prefill"]["n_admitted"] >= 6.0, \
+        "every admission (re-admissions included) is prefill-pool work"
+    assert roles["prefill"].get("n_finished", 0.0) \
+        + roles["decode"].get("n_finished", 0.0) == 6.0
+    assert roles["decode"].get("n_finished", 0.0) > 0.0
+    assert set(rollup_by_role(base_snap)) == {"general"}
+
+
+# ---------------------------------------------------------------------------
+# role-aware admission: scheduler + dispatchers
+# ---------------------------------------------------------------------------
+
+
+def test_role_accepts_phase_matrix():
+    fresh = Request(agent_name="a", msg_id="p", prompt_len=8,
+                    max_new_tokens=4)
+    assert fresh.phase is RequestPhase.PREFILL
+    assert role_accepts("general", fresh)
+    assert role_accepts("prefill", fresh)
+    assert not role_accepts("decode", fresh)
+    fresh.phase = RequestPhase.DECODE
+    assert role_accepts("general", fresh)
+    assert not role_accepts("prefill", fresh)
+    assert role_accepts("decode", fresh)
+
+
+def test_decode_engine_never_admits_balancer_traffic(runner0):
+    e = _engine(runner0, 0, role="decode")
+    q = _reqs(n=1)[0]
+    assert not e.sched.can_admit(q), \
+        "decode instances admit only through adopt()"
+
+
+def test_prefill_engine_never_grows_decode_batches(runner0):
+    reset_request_ids()
+    e = _engine(runner0, 0, role="prefill")
+    for q in _reqs(n=2):
+        e.submit(q)
+    for _ in range(6):
+        e.step()
+    ready = e.sched.handoff_ready()
+    assert len(ready) == 2, "prefill must complete"
+    assert all(q.output_len == 0 for q in e.sched.running), \
+        "prefill instances must not decode un-stranded requests"
+    for q in ready:
+        e.sched.allow_colocated_decode(q)
+    e.step()
+    assert all(q.output_len > 0 for q in e.sched.running), \
+        "stranded requests decode colocated"
+
+
+def _ramp(now):
+    return MemoryRamp(p_tokens=16.0, slope=2.0, t_start=now, t_end=now + 1.0)
+
+
+@pytest.mark.parametrize("force", [False, True])
+def test_timeslot_dispatcher_routes_by_role(force):
+    insts = [InstanceModel(0, 512.0, role="prefill"),
+             InstanceModel(1, 512.0, role="decode")]
+    d = TimeSlotDispatcher(insts)
+    q = Request(agent_name="a", msg_id="x", prompt_len=8, max_new_tokens=4)
+    assert d.dispatch(q, _ramp(0.0), 0.0, force=force) == 0, \
+        "prefill-phase work lands on the prefill instance, force included"
+    q2 = Request(agent_name="a", msg_id="y", prompt_len=8, max_new_tokens=4)
+    q2.phase = RequestPhase.DECODE
+    assert d.dispatch(q2, _ramp(0.0), 0.0, force=force) == 1
+
+
+def test_round_robin_dispatcher_respects_roles():
+    insts = [InstanceModel(0, 512.0, role="decode"),
+             InstanceModel(1, 512.0, role="prefill")]
+    d = RoundRobinDispatcher(insts)
+    for i in range(3):   # rotation never lands prefill work on decode
+        q = Request(agent_name="a", msg_id=f"r{i}", prompt_len=8,
+                    max_new_tokens=4)
+        assert d.dispatch(q, _ramp(0.0), 0.0) == 1
+
+
+def test_handoff_rejects_mid_prefill_request(runner0):
+    reset_request_ids()
+    e0 = _engine(runner0, 0, role="prefill", chunk=6)
+    e1 = _engine(runner0, 1, role="decode", chunk=6)
+    for q in _reqs(n=2, uniq=21):
+        e0.submit(q)
+    e0.step()
+    mid = next(q for q in e0.sched.running
+               if q.prefilled_len < q.prompt_len)
+    with pytest.raises(HandoffError):
+        handoff(e0, e1, mid)
+    assert mid in e0.sched.running, "refusal must leave the request"
+
+
+# ---------------------------------------------------------------------------
+# migration batching: one gathered donated dispatch per batch
+# ---------------------------------------------------------------------------
+
+
+def test_migrate_many_single_dispatch(runner0):
+    base = _baseline(runner0)
+    reset_request_ids()
+    e0, e1 = _engine(runner0, 0), _engine(runner0, 1)
+    for q in _reqs():
+        e0.submit(q)
+    done = []
+    for _ in range(3):
+        done.extend(e0.step())
+    batch = list(e0.sched.running)
+    assert len(batch) >= 2, "want a real batch"
+    d0 = e1.runner.n_dispatches
+    snaps, skipped = migrate_many(e0, e1, batch)
+    assert len(snaps) == len(batch) and not skipped
+    assert e1.runner.n_dispatches - d0 == 1, \
+        "N requests to one target must cost exactly one write dispatch"
+    assert sum(s.n_bytes for s in snaps) > 0
+    for _ in range(4000):
+        done.extend(e0.step())
+        done.extend(e1.step())
+        if not (e0.sched.has_work or e1.sched.has_work):
+            break
+    assert _tokens(done) == base
+
+
+def test_migrate_many_skips_infeasible_without_dispatch(runner0):
+    reset_request_ids()
+    e0 = _engine(runner0, 0)
+    e1 = _engine(runner0, 1, num_blocks=2)   # cannot adopt anything
+    for q in _reqs(n=2):
+        e0.submit(q)
+    e0.step()
+    d0 = e1.runner.n_dispatches
+    snaps, skipped = migrate_many(e0, e1, list(e0.sched.running))
+    assert not snaps and len(skipped) == 2
+    assert e1.runner.n_dispatches == d0, "a fully-skipped batch is free"
+    assert all(q in e0.sched.running for q in skipped)

@@ -5,9 +5,9 @@ every :class:`ServingConfig` field, and every plain (non-derived) target
 must be a real :class:`SimConfig` field — so a knob added on one side
 cannot silently not exist on the other.  Around that: the
 ``from_config`` builders consume the config faithfully, the simulator
-mapping translates policy/backend spellings, the Workflow legacy-kwarg
-shim warns-and-works for one release, and the cluster's public
-submit/drain/metrics_snapshot contract holds.
+mapping translates policy/backend spellings, the removed Workflow
+legacy kwargs fail loudly (``TypeError`` naming ``ServingConfig``), and
+the cluster's public submit/drain/metrics_snapshot contract holds.
 """
 import dataclasses
 import warnings
@@ -134,7 +134,7 @@ def test_cluster_from_config_and_public_contract(model_and_params):
 
 
 # =============================================================================
-# Workflow legacy-kwarg deprecation shim
+# Workflow legacy kwargs: removed after the one-release deprecation window
 # =============================================================================
 
 
@@ -143,27 +143,22 @@ def test_workflow_accepts_config():
     cfg = ServingConfig(num_blocks=48, block_size=8, max_batch=2,
                         prefix_caching=True)
     with warnings.catch_warnings():
-        warnings.simplefilter("error")        # no deprecation on new path
+        warnings.simplefilter("error")        # config path warns nothing
         wf = Workflow(app_name="t", config=cfg)
     assert wf.config is cfg
 
 
-def test_workflow_legacy_kwargs_warn_and_fold():
+def test_workflow_legacy_kwargs_raise_pointing_at_config():
     from repro.agents import Workflow
-    with pytest.warns(DeprecationWarning, match="ServingConfig"):
-        wf = Workflow(app_name="t", n_instances=2, num_blocks=48,
-                      block_size=8, prefix_caching=True)
-    assert wf.config == ServingConfig(n_instances=2, num_blocks=48,
-                                      block_size=8, prefix_caching=True,
-                                      max_batch=4)   # legacy default batch
+    with pytest.raises(TypeError, match="ServingConfig"):
+        Workflow(app_name="t", n_instances=2, num_blocks=48,
+                 block_size=8, prefix_caching=True)
 
 
-def test_workflow_rejects_config_plus_legacy_kwargs():
+def test_workflow_rejects_unknown_kwargs():
     from repro.agents import Workflow
-    with pytest.raises(TypeError, match="not both"):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            Workflow(app_name="t", config=ServingConfig(), num_blocks=8)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        Workflow(app_name="t", not_a_knob=1)
 
 
 def test_workflow_default_matches_legacy_default():
