@@ -1,0 +1,249 @@
+"""Chaos drain: planned instance crashes mid-drain + overload shedding.
+
+Two halves, one BENCH JSON (gated by ``check_regression.py`` under
+``chaos_drain``):
+
+**A. Crash recovery losslessness (real cluster, CI-gated EXACT).**  A
+shared-prefix workload drains through a real 3-instance
+:class:`ServingCluster` while a seeded :class:`FaultPlan` kills
+instances mid-drain (one spared survivor).  Every in-flight request on
+a dead instance is reconstructed — re-queued with prompt + emitted
+tokens so the argmax decode replays bit-identically — and the drained
+token streams must equal a fault-free drain of the same workload:
+``lost_requests``, ``recovered_token_mismatch`` and
+``chaos_failed_requests`` are all gated at exactly 0.  The replay tax
+(``recovery_replay_overhead``: re-prefilled tokens per baseline output
+token) is hardware-independent and gated by a ceiling.
+
+**B. SLO-aware shedding under overload (deterministic sim).**  The same
+seeded overload trace runs twice through the discrete-event simulator —
+valve off and valve on (``slo_e2e_s`` set).  Shedding the requests
+least likely to meet their deadline must keep goodput-under-SLO
+*strictly above* the no-shedding collapse
+(``shed_vs_noshed_goodput_ratio`` ratio-floor >= 1.0, measured ~1.7x)
+and must not drop below the committed baseline (``goodput_slo_shed``).
+A small faulted sim rides along: ``sim_faulted_lost`` and the
+workflow-count delta vs its fault-free twin are gated at exactly 0.
+
+Run: ``PYTHONPATH=src python -m benchmarks.chaos_drain [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import Row, row, write_bench_json
+
+CHAOS_SEED = 5          # names the crash plan (2 crashes, instance 0 spared)
+SIM_FAULT_SEED = 3      # names the sim's crash+straggle+oom plan
+SLO_E2E_S = 12.0        # request arrival->finish deadline (sim, part B)
+
+
+# =============================================================================
+# part A: crashed drain on a real cluster
+# =============================================================================
+
+
+def _model_and_params():
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _workload(n_reqs: int, max_new: int) -> List:
+    """Shared-prefix requests with varying unique tails, so recovery
+    re-prefills hit surviving prefix caches."""
+    from repro.serving import Request
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, 500, 16).astype(np.int32)
+    reqs = []
+    for i in range(n_reqs):
+        toks = np.concatenate(
+            [prefix, rng.integers(0, 500, 5 + (i % 9)).astype(np.int32)])
+        reqs.append(Request(
+            agent_name=f"a{i % 3}", msg_id=f"m{i}", prompt_len=len(toks),
+            prompt_tokens=toks, max_new_tokens=max_new,
+            arrival_time=float(i)))
+    return reqs
+
+
+def _cluster_cfg():
+    from repro.serving import ServingConfig
+    return ServingConfig(num_blocks=64, block_size=8, max_batch=4,
+                         n_instances=3, policy="fcfs", prefix_caching=True,
+                         recovery_retries=3)
+
+
+def _orch():
+    from repro.core import Orchestrator
+    from repro.core.orchestrator import HardwareProfile
+    return Orchestrator(hardware=HardwareProfile(
+        decode_tok_per_s=20.0, kv_capacity_tokens=64 * 8))
+
+
+def _drain(model, params, wl_cfg: Dict, faults=None):
+    from repro.serving import ServingCluster, reset_request_ids
+    reset_request_ids()
+    cluster = ServingCluster.from_config(model, params, _orch(),
+                                         _cluster_cfg(), faults=faults)
+    for q in _workload(wl_cfg["n_reqs"], wl_cfg["max_new"]):
+        cluster.submit(q)
+    done = []
+    for _ in range(100_000):
+        done.extend(cluster.step())
+        if not cluster.has_work:
+            break
+    snap = cluster.metrics_snapshot()
+    cluster.close()
+    return done, snap
+
+
+def measure_chaos(smoke: bool) -> Dict:
+    from repro.serving import FaultPlan, RequestState
+    model, params = _model_and_params()
+    wl = {"n_reqs": 8 if smoke else 16, "max_new": 10 if smoke else 14}
+    base_done, _ = _drain(model, params, wl)
+    base = {q.msg_id: list(q.output_tokens) for q in base_done}
+    base_tokens = sum(len(v) for v in base.values())
+
+    plan = FaultPlan.generate(CHAOS_SEED, [0, 1, 2], horizon=10,
+                              n_crashes=2, spare=(0,))
+    done, snap = _drain(model, params, wl, faults=plan)
+    failed = [q for q in done if q.state is RequestState.FAILED]
+    chaos = {q.msg_id: list(q.output_tokens) for q in done
+             if q.state is not RequestState.FAILED}
+    lost = len(set(base) - set(chaos))
+    mismatch = sum(chaos.get(k) != base[k] for k in base if k in chaos)
+    return {
+        "lost_requests": float(lost),
+        "recovered_token_mismatch": float(mismatch),
+        "chaos_failed_requests": float(len(failed)),
+        "chaos_crashes": snap["n_crashes"],
+        "chaos_reconstructed": snap["n_reconstructed"],
+        "chaos_replayed_tokens": snap["n_replayed_tokens"],
+        "chaos_surviving_instances": snap["n_instances"],
+        "recovery_replay_overhead": snap["n_replayed_tokens"]
+        / max(base_tokens, 1),
+    }
+
+
+# =============================================================================
+# part B: shedding under overload + a faulted sim (deterministic)
+# =============================================================================
+
+
+def _sim_kw(smoke: bool, **over):
+    from repro.sim.workload import make_app
+    kw = dict(apps=[make_app("QA", "G+M")], policy="kairos", rate=4.0,
+              duration=10.0 if smoke else 30.0, n_instances=3,
+              kv_capacity_tokens=4096, block_size=16, max_batch=8, seed=1)
+    kw.update(over)
+    return kw
+
+
+def measure_shed(smoke: bool) -> Dict:
+    from repro.sim.simulator import SimConfig, Simulation
+    kw = _sim_kw(smoke, rate=12.0, duration=20.0 if smoke else 45.0,
+                 n_instances=2, kv_capacity_tokens=3072, seed=3)
+    res_off = Simulation(SimConfig(**kw)).run()
+    res_on = Simulation(SimConfig(slo_e2e_s=SLO_E2E_S, shed_queue_high=4.0,
+                                  **kw)).run()
+    g_off = res_off.goodput(SLO_E2E_S)
+    g_on = res_on.goodput(SLO_E2E_S)
+    return {
+        "goodput_slo_shed": g_on,
+        "goodput_slo_noshed": g_off,
+        "shed_vs_noshed_goodput_ratio": g_on / max(g_off, 1e-9),
+        "n_shed": float(res_on.n_shed),
+        "shed_p99_s": res_on.summary()["p99"],
+        "noshed_p99_s": res_off.summary()["p99"],
+    }
+
+
+def measure_sim_faults(smoke: bool) -> Dict:
+    from repro.serving import FaultPlan
+    from repro.sim.simulator import SimConfig, Simulation
+    plan = FaultPlan.generate(SIM_FAULT_SEED, [0, 1, 2], horizon=12,
+                              n_crashes=1, n_straggles=1, n_ooms=1,
+                              spare=(0,))
+    kw = _sim_kw(smoke)
+    res = Simulation(SimConfig(faults=plan, recovery_backoff_s=0.1,
+                               **kw)).run()
+    res0 = Simulation(SimConfig(**kw)).run()
+    return {
+        "sim_faulted_lost": float(res.n_lost),
+        "sim_faulted_workflows_delta": float(
+            abs(len(res.workflows) - len(res0.workflows))),
+        "sim_crashes": float(res.n_crashes),
+        "sim_reconstructed": float(res.n_reconstructed),
+    }
+
+
+# =============================================================================
+# driver
+# =============================================================================
+
+
+def measure(smoke: bool = True) -> Dict:
+    cfg = {"smoke": smoke, "chaos_seed": CHAOS_SEED,
+           "sim_fault_seed": SIM_FAULT_SEED, "slo_e2e_s": SLO_E2E_S}
+    t0 = time.time()
+    metrics = {}
+    metrics.update(measure_chaos(smoke))
+    metrics.update(measure_shed(smoke))
+    metrics.update(measure_sim_faults(smoke))
+    metrics["wall_total_s"] = time.time() - t0
+    return {"config": cfg, "metrics": metrics}
+
+
+def run(quick: bool = True) -> List[Row]:
+    m = measure(smoke=quick)["metrics"]
+    return [
+        row("chaos_lost_requests", m["lost_requests"] * 1e-6,
+            f"crashes={m['chaos_crashes']:.0f}"
+            f" replayed={m['chaos_replayed_tokens']:.0f}"),
+        row("chaos_recovered_mismatch",
+            m["recovered_token_mismatch"] * 1e-6,
+            f"reconstructed={m['chaos_reconstructed']:.0f}"),
+        row("chaos_goodput_shed", m["goodput_slo_shed"] * 1e-6,
+            f"noshed={m['goodput_slo_noshed']:.3f}"
+            f" shed={m['n_shed']:.0f}"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for the CI smoke job")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    doc = measure(smoke=args.smoke)
+    for k in sorted(doc["metrics"]):
+        print(f"{k} = {doc['metrics'][k]}")
+    m = doc["metrics"]
+    bad = (m["lost_requests"] + m["recovered_token_mismatch"]
+           + m["chaos_failed_requests"] + m["sim_faulted_lost"])
+    if bad:
+        raise SystemExit(
+            f"FAIL: chaos oracle violated (lost={m['lost_requests']:.0f}"
+            f" mismatch={m['recovered_token_mismatch']:.0f}"
+            f" failed={m['chaos_failed_requests']:.0f}"
+            f" sim_lost={m['sim_faulted_lost']:.0f})")
+    if m["shed_vs_noshed_goodput_ratio"] <= 1.0:
+        raise SystemExit(
+            "FAIL: shedding did not improve goodput under SLO "
+            f"(ratio {m['shed_vs_noshed_goodput_ratio']:.3f})")
+    if args.json:
+        write_bench_json(args.json, "chaos_drain", doc["config"],
+                         doc["metrics"])
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -121,6 +121,32 @@ GATES = {
         # drop below the committed baseline as the autoscaler evolves
         "baseline_floors": ("goodput_slo_elastic",),
     },
+    "chaos_drain": {
+        "wall": (),
+        # crash recovery is lossless BY CONSTRUCTION, all pinned at 0 by
+        # the baseline ("must not grow" from 0 means stays 0):
+        #   no request on a crashed instance may be lost, every recovered
+        #   stream must equal the fault-free drain bit for bit, nothing
+        #   may exhaust its retry budget on the committed plan, and the
+        #   faulted sim twin loses nothing either
+        "exact": ("lost_requests", "recovered_token_mismatch",
+                  "chaos_failed_requests", "sim_faulted_lost",
+                  "sim_faulted_workflows_delta"),
+        "host_exact": (),
+        # the acceptance oracle (ISSUE): under sustained overload,
+        # shedding must keep goodput-under-SLO STRICTLY above the
+        # no-shedding collapse (measured ~1.7x; 1.0 trips only if the
+        # valve stops paying for itself)
+        "ratio_floors": {"shed_vs_noshed_goodput_ratio": 1.0},
+        # replay tax: re-prefilled tokens per baseline output token on
+        # the committed plan (measured ~0.25 — recovery re-derives far
+        # less than one drain's worth of work; 1.0 means recovery costs
+        # as much as re-running everything)
+        "ceilings": {"recovery_replay_overhead": 1.0},
+        # deterministic seeded sim: shedding goodput must not drop below
+        # the committed baseline as the valve evolves
+        "baseline_floors": ("goodput_slo_shed",),
+    },
     "disagg": {
         "wall": (),
         # prefill/decode disaggregation is lossless AND cheap BY

@@ -26,6 +26,7 @@ def main() -> None:
 
     from benchmarks import (
         autoscale_burst,
+        chaos_drain,
         chunked_prefill,
         cluster_overlap,
         disagg,
@@ -51,7 +52,7 @@ def main() -> None:
                fig16_sorting_accuracy, fig17_larger_llm, fig18_ablation,
                overhead, kernel_bench, prefix_reuse, chunked_prefill,
                iteration_fusion, cluster_overlap, latency_breakdown,
-               shard_scale, autoscale_burst, disagg]
+               shard_scale, autoscale_burst, disagg, chaos_drain]
 
     print("name,us_per_call,derived")
     failures = 0

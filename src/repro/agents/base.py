@@ -22,7 +22,7 @@ from repro.core.orchestrator import HardwareProfile
 from repro.models import build_model
 from repro.obs.trace import NULL_TRACER, TraceContext, Tracer
 from repro.serving import LLMEngine, ServingCluster, ServingConfig
-from repro.serving.request import Request
+from repro.serving.request import Request, RequestState
 
 
 class BaseAgent:
@@ -162,31 +162,51 @@ class Workflow:
     # ------------------------------------------------------------------ llm
     def _llm_call(self, agent_name: str, prompt_tokens, metadata: Headers,
                   max_new_tokens: int, shared_prefix_len: int = 0) -> List[int]:
-        req = Request(
-            agent_name=agent_name, msg_id=metadata.msg_id,
-            upstream_name=metadata.upstream_name, app_name=metadata.app_name,
-            prompt_len=len(prompt_tokens), prompt_tokens=np.asarray(prompt_tokens),
-            max_new_tokens=max_new_tokens,
-            shared_prefix_len=shared_prefix_len, cache_key=agent_name,
-            arrival_time=time.monotonic(), app_start_time=metadata.app_start_time)
-        if self.tracer.enabled:
-            # workflow trace context: msg_id is the trace id, this LLM
-            # call is one span, descended from the upstream agent stage —
-            # obs/critical_path.py stitches these into the workflow DAG
-            req.trace = TraceContext(trace_id=metadata.msg_id,
-                                     span_id=req.req_id,
-                                     parent_name=metadata.upstream_name)
-        ev = threading.Event()
-        box: list = []
-        self._submissions.put((req, ev, box))
-        if not ev.wait(timeout=self.llm_timeout_s):
-            # surface the deadlock instead of masking it as an empty
-            # generation: the exception propagates through the agent
-            # thread, which marks this workflow failed in the results
-            raise TimeoutError(
-                f"LLM call by agent {agent_name!r} (msg {metadata.msg_id}) "
-                f"timed out after {self.llm_timeout_s:.0f}s")
-        return box[0]
+        retries = self.config.llm_retries
+        backoff = self.config.llm_backoff_s
+        for attempt in range(retries + 1):
+            req = Request(
+                agent_name=agent_name, msg_id=metadata.msg_id,
+                upstream_name=metadata.upstream_name, app_name=metadata.app_name,
+                prompt_len=len(prompt_tokens), prompt_tokens=np.asarray(prompt_tokens),
+                max_new_tokens=max_new_tokens,
+                shared_prefix_len=shared_prefix_len, cache_key=agent_name,
+                arrival_time=time.monotonic(), app_start_time=metadata.app_start_time)
+            if self.tracer.enabled:
+                # workflow trace context: msg_id is the trace id, this LLM
+                # call is one span, descended from the upstream agent stage —
+                # obs/critical_path.py stitches these into the workflow DAG
+                req.trace = TraceContext(trace_id=metadata.msg_id,
+                                         span_id=req.req_id,
+                                         parent_name=metadata.upstream_name)
+            ev = threading.Event()
+            box: list = []
+            self._submissions.put((req, ev, box))
+            if ev.wait(timeout=self.llm_timeout_s):
+                if req.state in (RequestState.FAILED, RequestState.SHED):
+                    # the serving layer gave up on this request (recovery
+                    # budget spent, or the overload valve shed it) — fail
+                    # the workflow rather than hand back a bogus stream
+                    raise RuntimeError(
+                        f"LLM call by agent {agent_name!r} "
+                        f"(msg {metadata.msg_id}) was "
+                        f"{'shed' if req.state is RequestState.SHED else 'failed'}"
+                        " by the serving layer")
+                return box[0]
+            if attempt < retries:
+                # capped exponential backoff, then a FRESH request: the
+                # timed-out one may still finish later — its orphaned
+                # event/box pair just gets dropped.  Retries stay inside
+                # this call, so the workflow's outstanding count is
+                # untouched until the stage truly fails.
+                time.sleep(min(backoff * (2.0 ** attempt), 8.0 * backoff))
+        # surface the deadlock instead of masking it as an empty
+        # generation: the exception propagates through the agent
+        # thread, which marks this workflow failed in the results
+        raise TimeoutError(
+            f"LLM call by agent {agent_name!r} (msg {metadata.msg_id}) "
+            f"timed out after {self.llm_timeout_s:.0f}s "
+            f"({retries + 1} attempt{'s' if retries else ''})")
 
     # ------------------------------------------------------------------ agents
     def _on_message(self, msg):

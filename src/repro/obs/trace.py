@@ -60,6 +60,21 @@ Event taxonomy (``kind``):
                         size after; ``data['role']`` on role-typed clusters)
 ``scale-down``          autoscaler retired an instance (same ``data``)
 ``finish``              request completed (``data['out']`` = output tokens)
+``fault-injected``      a planned :class:`~repro.serving.faults.FaultSpec`
+                        fired (``data['fault']`` = crash/straggle/oom/
+                        transfer, ``['step']`` = instance iteration index)
+``failure-detected``    recovery declared an instance dead or straggling
+                        (``data['reason']``, ``['n_lost']`` = in-flight
+                        requests to reconstruct on a crash)
+``recovery-replay``     a lost request was reconstructed: re-queued with
+                        prompt + already-emitted tokens (``data['replayed']``
+                        = tokens to re-emit verbatim, ``['retry']``)
+``handoff-strand``      a prefill-complete request found no decode capacity
+                        and will decode colocated (``data['attempts']``,
+                        ``['permanent']`` once the retry cap is spent)
+``shed``                the overload valve dropped a request judged unable
+                        to meet its deadline (``data['slack']``,
+                        ``['queued']`` = balancer depth at shed time)
 ======================  =====================================================
 """
 from __future__ import annotations
@@ -73,6 +88,8 @@ EVENT_KINDS = (
     "first-token", "decode", "iteration", "preempt", "evict", "oom-fence",
     "handoff-start", "handoff-complete", "scale-up", "scale-down",
     "finish",
+    "fault-injected", "failure-detected", "recovery-replay",
+    "handoff-strand", "shed",
 )
 
 

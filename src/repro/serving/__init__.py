@@ -25,6 +25,15 @@ from repro.serving.engine import (
     TokenRef,
 )
 from repro.serving.cluster import ServingCluster
+from repro.serving.faults import (
+    FAULT_KINDS,
+    DispatchEffects,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    InstanceCrashed,
+    TransferFault,
+)
 from repro.serving.handoff import (
     HandoffError,
     decode_targets,
@@ -41,6 +50,7 @@ from repro.serving.migration import (
     snapshot_request,
 )
 from repro.serving.prefix_cache import PrefixCache, PrefixCacheStats
+from repro.serving.recovery import LoadShedder, RecoveryManager, RecoveryRecord
 from repro.serving.request import (
     CompletionRecord,
     Request,
@@ -62,4 +72,7 @@ __all__ = ["BatchScheduler", "IterationBatch", "IterationPlan",
            "InstanceSignal", "signals_from_cluster",
            "MigrationError", "RequestSnapshot", "migrate", "migrate_many",
            "restore_request", "snapshot_request",
-           "HandoffError", "handoff", "decode_targets", "drive_handoffs"]
+           "HandoffError", "handoff", "decode_targets", "drive_handoffs",
+           "FAULT_KINDS", "DispatchEffects", "FaultInjector", "FaultPlan",
+           "FaultSpec", "InstanceCrashed", "TransferFault",
+           "LoadShedder", "RecoveryManager", "RecoveryRecord"]

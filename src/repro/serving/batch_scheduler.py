@@ -378,9 +378,18 @@ class BatchScheduler:
         self.role = role
         # req_ids a prefill-role instance may decode colocated: the
         # handoff driver strands a request here when no decode-capable
-        # target can adopt it (retried every step; decoding meanwhile
-        # loses nothing — migration is bit-identical mid-decode)
+        # target can adopt it (retried with exponential backoff up to a
+        # cap; decoding meanwhile loses nothing — migration is
+        # bit-identical mid-decode)
         self.stranded: set = set()
+        # strand-retry control (serving/handoff.py): failed-handoff count
+        # per req_id, the sweep number before which a stranded request is
+        # not re-offered, and the driver's sweep counter.  Past the cap a
+        # request stops being offered at all — permanent colocation
+        # instead of re-probing a full decode pool every sweep.
+        self.strand_attempts: Dict[int, int] = {}
+        self._strand_next: Dict[int, int] = {}
+        self._handoff_sweep = 0
         self.bm = bm
         self.policy = policy or FCFSScheduler()
         self.prefix_cache = prefix_cache
@@ -555,6 +564,8 @@ class BatchScheduler:
         victim.first_token_time = -1.0             # recompute re-times TTFT
         victim.phase = RequestPhase.PREFILL        # prompt KV gone: re-prefill
         self.stranded.discard(victim.req_id)
+        self.strand_attempts.pop(victim.req_id, None)
+        self._strand_next.pop(victim.req_id, None)
         self.waiting.append(victim)
         self.stats.n_preempted += 1
         self.stats.recent_oom = True
@@ -686,24 +697,28 @@ class BatchScheduler:
         return IterationPlan(chunks, decode, cow, prefill_tokens,
                              context_tokens)
 
-    def _register_written_blocks(self, req: Request):
+    def _register_written_blocks(self, req: Request) -> List[tuple]:
         """Chunked prefill: once a prompt block's KV is fully computed it
         may be shared — register it with the prefix cache.  (Admission
         matches run before chunk composition, so a match can never see a
-        block whose KV has not been executed by the backend.)"""
+        block whose KV has not been executed by the backend.)  Returns
+        the ``(hash, block)`` pairs newly indexed, for callers that
+        register ahead of the KV actually landing (:meth:`adopt`)."""
         hashes = self._pending_hashes.get(req.req_id)
         if hashes is None:
-            return
+            return []
         done = min(req.prefilled_len // self.bm.block_size, len(hashes))
         ins = self._inserted_blocks[req.req_id]
+        pairs: List[tuple] = []
         if done > ins:
             table = self.bm.block_table(req.req_id)
-            self.prefix_cache.insert(hashes[ins:done], table[ins:done],
-                                     self.bm)
+            pairs = self.prefix_cache.insert(hashes[ins:done],
+                                             table[ins:done], self.bm)
             self._inserted_blocks[req.req_id] = done
         if req.prefilled_len >= req.prompt_len:
             self._pending_hashes.pop(req.req_id, None)
             self._inserted_blocks.pop(req.req_id, None)
+        return pairs
 
     # ----------------------------------------------------------- disaggregation
     def handoff_ready(self) -> List[Request]:
@@ -716,6 +731,34 @@ class BatchScheduler:
         if self.role != "prefill":
             return []
         return [r for r in self.running if r.prefilled_len >= r.prompt_len]
+
+    def handoff_offers(self, retry_cap: int) -> List[Request]:
+        """:meth:`handoff_ready` filtered by strand-retry control, for
+        one driver sweep (advances the sweep counter).  A stranded
+        request backing off is withheld until its next-offer sweep; one
+        past ``retry_cap`` failed offers is withheld permanently —
+        colocated decode is its final home, so a full decode pool stops
+        costing a probe per request per sweep."""
+        self._handoff_sweep += 1
+        out = []
+        for r in self.handoff_ready():
+            a = self.strand_attempts.get(r.req_id, 0)
+            if a > retry_cap:
+                continue
+            if self._strand_next.get(r.req_id, 0) > self._handoff_sweep:
+                continue
+            out.append(r)
+        return out
+
+    def note_strand(self, req: Request, retry_cap: int) -> bool:
+        """Book one failed handoff offer for ``req``: bump its attempt
+        count and schedule its next offer exponentially later.  Returns
+        True when the cap is now exceeded (the strand is permanent)."""
+        a = self.strand_attempts.get(req.req_id, 0) + 1
+        self.strand_attempts[req.req_id] = a
+        self._strand_next[req.req_id] = self._handoff_sweep + (
+            1 << min(a, 6))
+        return a > retry_cap
 
     def allow_colocated_decode(self, req: Request) -> None:
         """Lossless fallback when no decode-capable instance can adopt
@@ -746,6 +789,8 @@ class BatchScheduler:
         self._pending_hashes.pop(req.req_id, None)
         self._inserted_blocks.pop(req.req_id, None)
         self.stranded.discard(req.req_id)
+        self.strand_attempts.pop(req.req_id, None)
+        self._strand_next.pop(req.req_id, None)
         self.running.remove(req)
         req.state = RequestState.QUEUED
         self.stats.n_migrated_out += 1
@@ -802,8 +847,19 @@ class BatchScheduler:
         if hashes and self.prefix_cache is not None:
             self._pending_hashes[req.req_id] = list(hashes)
             self._inserted_blocks[req.req_id] = len(cached)
-            self._register_written_blocks(req)
+            # indexed ahead of the migration's KV transfer: provisional
+            # until the caller confirms the write landed, so a rolled-back
+            # adoption cannot leave matchable-but-garbage blocks behind
+            pairs = self._register_written_blocks(req)
+            if pairs:
+                self._provisional[req.req_id] = pairs
         return table
+
+    def confirm_adoption(self, req: Request) -> None:
+        """The migration's KV transfer landed: cache entries indexed by
+        :meth:`adopt` are now backed by real KV and must survive a later
+        release (wave-2 handoffs re-share them)."""
+        self._provisional.pop(req.req_id, None)
 
     # ------------------------------------------------------------------ finish
     def finish(self, req: Request, t: float):
@@ -821,4 +877,6 @@ class BatchScheduler:
         self._inserted_blocks.pop(req.req_id, None)
         self._provisional.pop(req.req_id, None)
         self.stranded.discard(req.req_id)
+        self.strand_attempts.pop(req.req_id, None)
+        self._strand_next.pop(req.req_id, None)
         self.stats.n_finished += 1

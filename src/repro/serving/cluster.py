@@ -40,6 +40,16 @@ control plane (:class:`LoadBalancer` / :class:`TimeSlotDispatcher` /
 * **Completion feedback** — finished requests flow to
   ``orchestrator.on_completion`` (workflow analyzer + profiler) and
   ``dispatcher.on_finish`` (release future slots) in one place.
+
+* **Fault plane** — a :class:`~repro.serving.faults.FaultPlan` (chaos
+  testing) injects crashes/stragglers/ooms at planned points; a crash
+  surfaces as :class:`InstanceCrashed` from the engine's dispatch and is
+  handled at the synced post-collect point by the cluster's
+  :class:`~repro.serving.recovery.RecoveryManager` — the dead instance
+  is fenced + removed and its in-flight requests are reconstructed with
+  bit-identical replay.  An optional
+  :class:`~repro.serving.recovery.LoadShedder` (``config.slo_e2e_s``)
+  sheds deadline-hopeless requests under sustained overload.
 """
 from __future__ import annotations
 
@@ -51,6 +61,8 @@ from repro.obs.metrics import merge_snapshots
 from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.config import ServingConfig
 from repro.serving.engine import LLMEngine
+from repro.serving.faults import FaultInjector, FaultPlan, InstanceCrashed
+from repro.serving.recovery import LoadShedder, RecoveryManager
 from repro.serving.request import CompletionRecord, Request
 
 
@@ -97,6 +109,7 @@ class ServingCluster:
                  oom_feedback: bool = True,
                  clock: Callable[[], float] = time.monotonic,
                  engine_factory: Optional[Callable[[int], LLMEngine]] = None,
+                 faults: Optional[FaultPlan] = None,
                  tracer: Tracer = NULL_TRACER):
         from repro.core.balancer import LoadBalancer
         from repro.core.dispatcher import InstanceModel, TimeSlotDispatcher
@@ -138,6 +151,20 @@ class ServingCluster:
         self.handoff_bytes = 0
         self.handoff_dispatches = 0
         self.n_stranded = 0
+        self.n_strand_retries = 0
+        # fault plane: one injector consumes the plan across the whole
+        # run (per-instance ordinals live in the injector); the recovery
+        # manager is always live — crashes need no opt-in — and the
+        # shedder only exists when config.slo_e2e_s arms the valve
+        # (from_config replaces both with config-tuned instances)
+        self.faults: Optional[FaultInjector] = (
+            FaultInjector(faults, tracer) if isinstance(faults, FaultPlan)
+            else faults)
+        for e in self.engines:
+            e.faults = self.faults
+        self.recovery = RecoveryManager(tracer=tracer)
+        self.shedder: Optional[LoadShedder] = None
+        self._shed_at_submit: List[Request] = []
         if dispatcher is None:
             dispatcher = TimeSlotDispatcher(
                 [InstanceModel(e.instance_id, e.kv_capacity_tokens,
@@ -229,6 +256,7 @@ class ServingCluster:
                 tracer=tracer, scheduler=scheduler, clock=clock,
                 **cluster_kwargs)
             cluster.config = config
+            cluster._arm_fault_plane(config, tracer)
             return cluster
         runner0 = PagedModelRunner.from_config(model, params, config,
                                                backend=backend)
@@ -247,7 +275,25 @@ class ServingCluster:
                       engine_factory=make_engine, clock=clock,
                       tracer=tracer, **cluster_kwargs)
         cluster.config = config
+        cluster._arm_fault_plane(config, tracer)
         return cluster
+
+    def _arm_fault_plane(self, config: ServingConfig, tracer: Tracer):
+        """Tune recovery to the config's budgets and arm the overload
+        valve when ``slo_e2e_s`` declares a deadline.  The shedder prices
+        service time with the default :class:`CostModel` — the same rule
+        the sim sheds by."""
+        self.recovery = RecoveryManager(
+            max_retries=config.recovery_retries,
+            backoff_s=config.recovery_backoff_s,
+            step_deadline_s=config.step_deadline_s, tracer=tracer)
+        if config.slo_e2e_s is not None:
+            from repro.sim.cost_model import CostModel
+            self.shedder = LoadShedder(
+                slo_e2e_s=config.slo_e2e_s, cost=CostModel(),
+                queue_high=config.shed_queue_high,
+                kv_high=config.shed_kv_high,
+                patience=config.shed_patience, tracer=tracer)
 
     # ----------------------------------------------------------- public surface
     #
@@ -263,7 +309,17 @@ class ServingCluster:
         the load balancer and placed onto an instance by a subsequent
         :meth:`step`; completion surfaces in that step's return value
         (and via ``orchestrator.on_completion``).  Valid at any time,
-        including while the autoscaler is resizing the cluster."""
+        including while the autoscaler is resizing the cluster.
+
+        When the overload valve is armed AND open (sustained overload),
+        a request whose deadline is already unreachable is shed at the
+        door instead of queued — it surfaces, state ``SHED``, in the
+        next step's finishers so drivers unblock."""
+        if (self.shedder is not None and self.shedder.open
+                and self.shedder.slack(req, self.clock()) < 0.0):
+            self.shedder.shed(req, self.clock(), len(self.balancer.queue))
+            self._shed_at_submit.append(req)
+            return
         self.balancer.enqueue(req)
 
     def can_admit(self, instance_id: int, req: Request) -> bool:
@@ -274,8 +330,10 @@ class ServingCluster:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.balancer.queue) or any(
-            e.sched.has_work or e.has_pending for e in self.engines)
+        return (bool(self.balancer.queue) or self.recovery.pending > 0
+                or bool(self._shed_at_submit)
+                or any(e.sched.has_work or e.has_pending
+                       for e in self.engines))
 
     # ---------------------------------------------------------------- stepping
     ROLE_STEP_ORDER = ("prefill", "general", "decode")
@@ -314,10 +372,18 @@ class ServingCluster:
         (source, target) batch."""
         now = self.clock() if now is None else now
         finished: List[Request] = []
+        if self._shed_at_submit:
+            # requests shed at the submit door surface here so callers
+            # waiting on step() results unblock
+            finished.extend(self._shed_at_submit)
+            self._shed_at_submit.clear()
+        self.recovery.tick(self, now)
         if self.autoscaler is not None:
             # engines are synced between steps, which is exactly when
             # live migration (scale-down drain) is legal
             finished.extend(self.autoscaler.step(self, now))
+        if self.shedder is not None:
+            finished.extend(self._shed_sweep(now))
         self.balancer.tick(now)
         for group in self._role_groups():
             if self.pipelined and len(group) > 1:
@@ -328,18 +394,40 @@ class ServingCluster:
                 futures = [self._pool.submit(self._dispatch_one, e)
                            for e in group]
                 for e, f in zip(group, futures):
-                    f.result()
+                    try:
+                        f.result()
+                    except InstanceCrashed:
+                        finished.extend(self.recovery.on_crash(self, e, now))
+                        continue
                     finished.extend(self._collect(e, now))
+                    self.recovery.check_step_deadline(
+                        self, e, e.last_step_wall, now)
             elif self.pipelined:
                 # single engine: nothing to overlap across instances —
                 # skip the worker handoff, keep the deferred host sync
                 e = group[0]
-                e.dispatch_iteration()
+                try:
+                    t0 = time.monotonic()
+                    e.dispatch_iteration()
+                    e.last_step_wall = time.monotonic() - t0
+                except InstanceCrashed:
+                    finished.extend(self.recovery.on_crash(self, e, now))
+                    continue
                 finished.extend(self._collect(e, now))
+                self.recovery.check_step_deadline(
+                    self, e, e.last_step_wall, now)
             else:
                 for e in group:
-                    e.dispatch_iteration()
+                    try:
+                        t0 = time.monotonic()
+                        e.dispatch_iteration()
+                        e.last_step_wall = time.monotonic() - t0
+                    except InstanceCrashed:
+                        finished.extend(self.recovery.on_crash(self, e, now))
+                        continue
                     finished.extend(self._collect(e, now, force_sync=True))
+                    self.recovery.check_step_deadline(
+                        self, e, e.last_step_wall, now)
         if any(e.role == "prefill" for e in self.engines):
             from repro.serving.handoff import drive_handoffs
             hs = drive_handoffs(self, now)
@@ -347,6 +435,7 @@ class ServingCluster:
             self.handoff_bytes += hs["handoff_bytes"]
             self.handoff_dispatches += hs["handoff_dispatches"]
             self.n_stranded += hs["n_stranded"]
+            self.n_strand_retries += hs["n_strand_retries"]
             for e in self.engines:
                 if e.role != "decode" or not e.sched.waiting:
                     continue
@@ -365,9 +454,14 @@ class ServingCluster:
     def _dispatch_one(e: LLMEngine):
         """Worker body: issue the engine's iteration and absorb its
         device wait here, off the control-plane thread.  Engine state is
-        instance-local, so workers never contend."""
+        instance-local, so workers never contend.  The measured wall time
+        (dispatch + device wait) feeds the straggler step-deadline check;
+        the write is engine-local, read post-collect on the control
+        plane."""
+        t0 = time.monotonic()
         e.dispatch_iteration()
         e.sync()
+        e.last_step_wall = time.monotonic() - t0
 
     def _collect(self, e: LLMEngine, now: float,
                  force_sync: bool = False) -> List[Request]:
@@ -378,6 +472,10 @@ class ServingCluster:
             # cooldown so the dispatcher stops stacking load on it
             self.dispatcher.on_oom(e.instance_id, now)
         for r in done:
+            # a recovered request's replayed prefix is re-emitted and its
+            # original prompt identity restored BEFORE the completion
+            # record — downstream sees it as if no crash had happened
+            self.recovery.on_finish(r)
             self.orch.on_completion(CompletionRecord(
                 agent_name=r.agent_name, msg_id=r.msg_id,
                 upstream_name=r.upstream_name, app_name=r.app_name,
@@ -423,6 +521,7 @@ class ServingCluster:
             "new engine must own its runner (donated pools are per-instance)"
         self.engines.append(engine)
         self._by_id[iid] = engine
+        engine.faults = self.faults
         self.dispatcher.add_instance(
             InstanceModel(iid, engine.kv_capacity_tokens, role=engine.role))
         self._resize_pool()
@@ -532,6 +631,40 @@ class ServingCluster:
                 best, best_key = e, key
         return best
 
+    def discard_engine(self, engine: LLMEngine):
+        """Forget a DEAD engine (crash path, called by
+        :class:`RecoveryManager`): unlike :meth:`scale_down` nothing is
+        collected or migrated — the engine's pool and scheduler state are
+        untrusted after a mid-dispatch death; its requests are
+        reconstructed from host-side truth instead."""
+        assert self.engines != [engine], \
+            "every instance crashed — nothing left to recover onto"
+        self.engines.remove(engine)
+        self._by_id.pop(engine.instance_id, None)
+        self._resize_pool()
+
+    def _shed_sweep(self, now: float) -> List[Request]:
+        """Overload valve sweep: feed the shedder the SAME queue-depth /
+        KV-pressure signals the autoscaler scales on, then shed its
+        victims out of the balancer queue."""
+        from repro.serving.autoscaler import signals_from_cluster
+        sig = signals_from_cluster(self, now)
+        max_kv = max((i.kv_used_frac for i in sig.instances), default=0.0)
+        if not self.shedder.observe(len(self.balancer.queue),
+                                    len(self.engines), max_kv):
+            return []
+        victims = self.shedder.select(self.balancer.queue, now,
+                                      len(self.engines))
+        if not victims:
+            return []
+        depth = len(self.balancer.queue)
+        gone = {r.req_id for r in victims}
+        self.balancer.queue = [r for r in self.balancer.queue
+                               if r.req_id not in gone]
+        for r in victims:
+            self.shedder.shed(r, now, depth)
+        return victims
+
     def _resize_pool(self):
         """Dispatch workers are one-per-engine; rebuild the pool lazily
         after the engine set changes."""
@@ -570,6 +703,13 @@ class ServingCluster:
         snap["handoff_bytes"] = float(self.handoff_bytes)
         snap["handoff_dispatches"] = float(self.handoff_dispatches)
         snap["n_stranded"] = float(self.n_stranded)
+        snap["handoff_strand_retries"] = float(self.n_strand_retries)
+        for k, v in self.recovery.metrics().items():
+            snap[k] = float(v)
+        snap["n_shed"] = float(self.shedder.n_shed
+                               if self.shedder is not None else 0)
+        snap["n_faults_fired"] = float(self.faults.n_fired
+                                       if self.faults is not None else 0)
         return snap
 
     # ------------------------------------------------------------------ drains

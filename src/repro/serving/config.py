@@ -53,6 +53,17 @@ SIM_FIELD_MAP = {
     "model_parallel": "tp_degree",
     "n_instances": "n_instances",
     "roles": "roles",
+    # -- fault plane (faults.py / recovery.py) --
+    "llm_retries": "llm_retries",           # driver-level; carried for parity
+    "llm_backoff_s": "llm_backoff_s",       # (sim virtual time can't stall)
+    "recovery_retries": "recovery_retries",
+    "recovery_backoff_s": "recovery_backoff_s",
+    "step_deadline_s": "step_deadline_s",   # real wall-clock; sim carries it
+    "slo_e2e_s": "slo_e2e_s",
+    "shed_queue_high": "shed_queue_high",
+    "shed_kv_high": "shed_kv_high",
+    "shed_patience": "shed_patience",
+    "handoff_retry_cap": "handoff_retry_cap",
 }
 
 ROLES = ("prefill", "decode", "general")
@@ -96,6 +107,19 @@ class ServingConfig:
     # cluster.  A topology with any "prefill" instance must contain a
     # decode-capable one ("decode" or "general") to hand off to.
     roles: Optional[tuple] = None
+    # -- fault tolerance (serving/faults.py, serving/recovery.py) -----------
+    llm_retries: int = 0                 # Workflow._llm_call TimeoutError
+    llm_backoff_s: float = 0.5           # retries + capped exp. backoff
+    recovery_retries: int = 3            # crashes a request may survive
+    recovery_backoff_s: float = 0.0      # exp. backoff between replays (s)
+    step_deadline_s: Optional[float] = None  # straggler fence threshold (s)
+    # -- overload shedding (recovery.LoadShedder; None = valve disabled) ----
+    slo_e2e_s: Optional[float] = None    # per-request e2e deadline
+    shed_queue_high: float = 8.0         # queued-per-instance overload line
+    shed_kv_high: float = 0.97           # KV-pressure overload line
+    shed_patience: int = 3               # sustained sweeps before valve opens
+    # -- disaggregation strand control --------------------------------------
+    handoff_retry_cap: int = 4           # probes before permanent colocation
 
     def __post_init__(self):
         assert self.num_blocks > 0 and self.block_size > 0
@@ -103,6 +127,13 @@ class ServingConfig:
         assert self.model_parallel >= 1
         assert (self.prefill_chunk_tokens is None
                 or self.prefill_chunk_tokens > 0)
+        assert self.llm_retries >= 0 and self.llm_backoff_s >= 0.0
+        assert self.recovery_retries >= 0 and self.recovery_backoff_s >= 0.0
+        assert self.step_deadline_s is None or self.step_deadline_s > 0.0
+        assert self.slo_e2e_s is None or self.slo_e2e_s > 0.0
+        assert self.shed_queue_high > 0 and self.shed_patience >= 1
+        assert 0.0 < self.shed_kv_high <= 1.0
+        assert self.handoff_retry_cap >= 0
         if self.roles is not None:
             # normalize list -> tuple so the frozen config stays hashable
             object.__setattr__(self, "roles", tuple(self.roles))

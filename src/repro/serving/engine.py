@@ -42,6 +42,7 @@ from repro.serving.batch_scheduler import (
     TokenPrefixMatcher,
     flatten_plan,
 )
+from repro.serving.faults import InstanceCrashed
 from repro.serving.kv_cache import BlockManager
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request
@@ -790,6 +791,12 @@ class LLMEngine:
         self.clock = clock
         self.tracer = tracer
         self._next_tok: dict[int, int] = {}
+        # fault plane (serving/faults.py): wired by the cluster; when set,
+        # every composed iteration consults the injector mid-dispatch
+        self.faults = None
+        # wall seconds of the last dispatch+sync, written by the stepping
+        # thread — recovery's step-deadline check reads it post-collect
+        self.last_step_wall = 0.0
         self.sched = BatchScheduler(
             self.bm, policy=policy, prefix_cache=self.prefix_cache,
             matcher=TokenPrefixMatcher(), max_running=max_batch,
@@ -920,6 +927,18 @@ class LLMEngine:
         plan = self.sched.plan(self.clock())
         if plan is None:
             return False
+        if self.faults is not None:
+            # mid-dispatch fault point: the plan has already mutated
+            # scheduler state (chunk bookkeeping, decode growth), which is
+            # exactly what a real worker death leaves behind.  Non-crash
+            # effects land first so a storm of ooms still fences.
+            eff = self.faults.on_dispatch(self.instance_id)
+            if eff.oom:
+                self.sched.stats.recent_oom = True
+            if eff.delay_s > 0.0:
+                time.sleep(eff.delay_s)
+            if eff.crash is not None:
+                raise InstanceCrashed(self.instance_id, eff.crash.step)
         if not self.fused_iteration:
             self._pending_finished = self._execute_per_chunk(plan)
             return True

@@ -23,11 +23,17 @@ CI-gated by ``benchmarks/disagg.py``):
 * **Lossless refusal** — when no decode-capable target can adopt a
   request, it is *stranded*: the prefill instance decodes it colocated
   (:meth:`BatchScheduler.allow_colocated_decode`) and the driver retries
-  every step, migrating mid-decode once capacity frees up.
+  with exponential backoff, migrating mid-decode once capacity frees up.
+  Past ``ServingConfig.handoff_retry_cap`` failed offers the strand is
+  *permanent* — a durably full decode pool degrades to colocated decode
+  instead of paying a probe per request per sweep forever.
 
 Placement is memory-aware: the most-free decode target wins (dedicated
 ``decode`` instances preferred over ``general`` ones), OOM-fenced
-instances are excluded.
+instances are excluded.  Transfer faults (``serving/faults.py``) and
+real ``write_blocks`` failures surface as :class:`MigrationError` from
+the migration layer *after lossless rollback* — the sweep skips the
+failed target and the requests stay intact on the source.
 """
 from __future__ import annotations
 
@@ -78,26 +84,42 @@ def drive_handoffs(cluster, now: float) -> dict:
 
     Called by ``ServingCluster.step`` after every engine has collected
     (all pools synced — the only legal transfer point).  For each
-    prefill instance, every prefill-complete request is offered to
-    decode-capable targets most-free-first; each (source, target) batch
-    costs one gathered donated ``write_blocks`` dispatch.  Requests no
-    target can take are stranded for colocated decode and retried next
-    step.  Returns the sweep's accounting (handoffs, bytes, dispatches,
-    strandings) — the cluster folds it into its metrics."""
+    prefill instance, every offerable prefill-complete request
+    (:meth:`BatchScheduler.handoff_offers` — strand backoff/cap applied)
+    is offered to decode-capable targets most-free-first; each (source,
+    target) batch costs one gathered donated ``write_blocks`` dispatch.
+    A target whose transfer fails (injected fault or real write error)
+    is skipped after the migration layer's lossless rollback.  Requests
+    no target can take are stranded for colocated decode and re-offered
+    with exponential backoff up to ``handoff_retry_cap`` attempts, then
+    permanently colocated.  Returns the sweep's accounting (handoffs,
+    bytes, dispatches, strandings, strand retries) — the cluster folds
+    it into its metrics."""
     stats = {"n_handoffs": 0, "handoff_bytes": 0,
-             "handoff_dispatches": 0, "n_stranded": 0}
+             "handoff_dispatches": 0, "n_stranded": 0,
+             "n_strand_retries": 0}
     tracer = cluster.tracer
+    cap = (cluster.config.handoff_retry_cap
+           if getattr(cluster, "config", None) is not None else 4)
+    faults = getattr(cluster, "faults", None)
     for src in cluster.engines:
         if src.role != "prefill":
             continue
-        remaining = src.sched.handoff_ready()
+        remaining = src.sched.handoff_offers(cap)
         if not remaining:
             continue
         for tgt in decode_targets(cluster, src, now):
             if not remaining:
                 break
             d0 = tgt.runner.n_dispatches
-            snaps, remaining = migrate_many(src, tgt, remaining, now)
+            try:
+                snaps, remaining = migrate_many(src, tgt, remaining, now,
+                                                faults=faults)
+            except MigrationError:
+                # transfer failed after target allocation: the migration
+                # layer rolled everything back onto the source — skip
+                # this target, the requests are intact and re-offerable
+                continue
             stats["n_handoffs"] += len(snaps)
             stats["handoff_bytes"] += sum(s.n_bytes for s in snaps)
             stats["handoff_dispatches"] += tgt.runner.n_dispatches - d0
@@ -114,11 +136,23 @@ def drive_handoffs(cluster, now: float) -> dict:
                                 ts=now, src=src.instance_id,
                                 cached=s.n_cached_blocks)
         for req in remaining:
-            # full decode pool: decode colocated rather than stall —
-            # lossless, and retried from handoff_ready() next step
-            if req.req_id not in src.sched.stranded:
+            # full decode pool (or every target's transfer failed):
+            # decode colocated rather than stall — lossless, re-offered
+            # with backoff until the retry cap makes the strand final
+            fresh = req.req_id not in src.sched.stranded
+            permanent = src.sched.note_strand(req, cap)
+            if fresh:
                 stats["n_stranded"] += 1
                 src.sched.allow_colocated_decode(req)
+            else:
+                stats["n_strand_retries"] += 1
+            if tracer.enabled:
+                tracer.emit("handoff-strand", req_id=req.req_id,
+                            instance_id=src.instance_id,
+                            agent=req.agent_name, msg_id=req.msg_id,
+                            ts=now,
+                            attempts=src.sched.strand_attempts[req.req_id],
+                            permanent=permanent)
     return stats
 
 

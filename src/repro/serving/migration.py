@@ -52,14 +52,18 @@ from typing import List, Optional
 import numpy as np
 
 from repro.serving.engine import LLMEngine
+from repro.serving.faults import TransferFault
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import Request
 
 
 class MigrationError(RuntimeError):
-    """The migration could not be performed (e.g. the target cannot adopt
-    the request).  Raised BEFORE any source state is released — the
-    request keeps running where it is."""
+    """The migration could not be performed — either refused up front
+    (e.g. the target cannot adopt) or rolled back after a transfer
+    failure.  Both ways the refusal is LOSSLESS: the request is running
+    on its source with identical progress, and the target holds none of
+    its blocks (``_rollback_adoptions`` re-homes already-adopted
+    requests before this is raised)."""
 
 
 @dataclasses.dataclass
@@ -147,6 +151,7 @@ def restore_request(engine: LLMEngine, snap: RequestSnapshot,
     addr_after = engine.runner.pool_address()
     assert addr_after == addr_before, \
         "write_blocks must donate the target pool in place"
+    engine.sched.confirm_adoption(req)
     if snap.pending_token is not None:
         engine.set_pending_token(req.req_id, snap.pending_token)
     req.instance_id = engine.instance_id
@@ -154,9 +159,26 @@ def restore_request(engine: LLMEngine, snap: RequestSnapshot,
     return len(cached)
 
 
+def _rollback_adoptions(source: LLMEngine, target: LLMEngine,
+                        snaps: List[RequestSnapshot], now: float):
+    """Undo a failed gathered transfer: release every adopted request's
+    target-side blocks and re-home its snapshot on the source (which just
+    released exactly the blocks it needs, so re-adoption cannot fail).
+    After this, block accounting balances on BOTH managers and every
+    request is RUNNING on the source with identical progress — the
+    lossless-refusal invariant ``tests/test_migration.py`` witnesses."""
+    for snap in reversed(snaps):
+        req = snap.req
+        if req.req_id in target.bm.owned_seqs():
+            target.sched.release(req)
+        target.drop_pending_token(req.req_id)
+        restore_request(source, snap, now)
+
+
 def migrate_many(source: LLMEngine, target: LLMEngine,
                  reqs: List[Request],
                  now: Optional[float] = None,
+                 faults=None,
                  ) -> tuple:
     """Migrate every feasible request of ``reqs`` from ``source`` to
     ``target`` with ONE gathered donated ``write_blocks`` dispatch.
@@ -170,7 +192,15 @@ def migrate_many(source: LLMEngine, target: LLMEngine,
 
     Returns ``(snapshots, skipped)``: snapshots of the migrated requests
     (sum their ``n_bytes`` for transfer accounting; the whole batch cost
-    at most one dispatch) and the requests left behind."""
+    at most one dispatch) and the requests left behind.
+
+    **Partial-failure hardening**: the gathered write is the transfer's
+    point of no return, and every adoption before it is provisional — if
+    it raises (or ``faults`` injects a planned
+    :class:`~repro.serving.faults.TransferFault` at that exact point),
+    all target-side adoptions are rolled back and every snapshot is
+    restored onto the source before :class:`MigrationError` surfaces.
+    No block leaks on either side, no request lost."""
     if target is source:
         raise MigrationError("migration target must differ from source")
     assert not target.has_pending, \
@@ -203,26 +233,56 @@ def migrate_many(source: LLMEngine, target: LLMEngine,
         req.instance_id = target.instance_id
         snap.n_cached_blocks = len(cached)
         snaps.append(snap)
-    if kv_parts:
-        target.runner.write_blocks(np.concatenate(kv_parts, axis=2),
-                                   table_parts)
+    try:
+        if faults is not None and snaps:
+            spec = faults.transfer_fault(source.instance_id, now)
+            if spec is not None:
+                raise TransferFault(source.instance_id, spec.step)
+        if kv_parts:
+            target.runner.write_blocks(np.concatenate(kv_parts, axis=2),
+                                       table_parts)
+    except Exception as err:
+        # transfer failed AFTER target allocation — the worst point.
+        # Roll back to lossless refusal: the source re-adopts every
+        # snapshot, the target's provisional blocks are released.
+        _rollback_adoptions(source, target, snaps, now)
+        raise MigrationError(
+            f"gathered transfer {source.instance_id}->"
+            f"{target.instance_id} failed and was rolled back: {err}"
+        ) from err
     assert target.runner.pool_address() == addr_before, \
         "gathered write_blocks must donate the target pool in place"
+    for snap in snaps:
+        target.sched.confirm_adoption(snap.req)
     return snaps, skipped
 
 
 def migrate(source: LLMEngine, target: LLMEngine, req: Request,
-            now: Optional[float] = None) -> RequestSnapshot:
+            now: Optional[float] = None,
+            faults=None) -> RequestSnapshot:
     """Snapshot ``req`` off ``source`` and restore it on ``target``.
 
     Feasibility is probed BEFORE anything is released (a refused
-    migration leaves the request untouched on the source); the snapshot
-    is returned so callers can account transfer bytes."""
+    migration leaves the request untouched on the source), and a restore
+    that fails mid-way — or a planned transfer fault — is rolled back to
+    the source (same lossless-refusal contract as :func:`migrate_many`).
+    The snapshot is returned so callers can account transfer bytes."""
     if target is source:
         raise MigrationError("migration target must differ from source")
     if not target.sched.can_adopt(req):
         raise MigrationError(
             f"instance {target.instance_id} cannot adopt req {req.req_id}")
     snap = snapshot_request(source, req)
-    restore_request(target, snap, now)
+    try:
+        if faults is not None:
+            spec = faults.transfer_fault(source.instance_id, now)
+            if spec is not None:
+                raise TransferFault(source.instance_id, spec.step)
+        restore_request(target, snap, now)
+    except Exception as err:
+        _rollback_adoptions(source, target, [snap],
+                            target.clock() if now is None else now)
+        raise MigrationError(
+            f"transfer {source.instance_id}->{target.instance_id} of req "
+            f"{req.req_id} failed and was rolled back: {err}") from err
     return snap

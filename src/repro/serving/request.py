@@ -32,6 +32,8 @@ class RequestState(enum.Enum):
     RUNNING = "running"
     PREEMPTED = "preempted"
     FINISHED = "finished"
+    FAILED = "failed"          # recovery retry budget exhausted
+    SHED = "shed"              # dropped by the overload valve (never ran)
 
 
 class RequestPhase(enum.Enum):

@@ -48,8 +48,10 @@ from repro.serving.batch_scheduler import (
     pad_bucket,
 )
 from repro.serving.config import ServingConfig
+from repro.serving.faults import FaultInjector, FaultPlan, InstanceCrashed
 from repro.serving.kv_cache import BlockManager
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.recovery import LoadShedder, RecoveryManager
 from repro.serving.request import CompletionRecord, Request, reset_request_ids
 from repro.sim.cost_model import LLAMA3_8B, CostModel
 from repro.sim.workload import AppSpec, arrival_times
@@ -95,6 +97,10 @@ class SimInstance:
         self.cache = PrefixCache(block_size) if prefix_caching else None
         self.busy = False
         self.tracer = tracer
+        # fault plane: the Simulation threads its FaultInjector here (one
+        # injector per run, per-instance dispatch ordinals inside it) —
+        # same consultation point as LLMEngine.dispatch_iteration
+        self.faults: Optional[FaultInjector] = None
         self.sched = BatchScheduler(
             self.bm, policy=policy, prefix_cache=self.cache,
             matcher=KeyPrefixMatcher(), max_running=max_batch,
@@ -161,6 +167,15 @@ class SimInstance:
         plan = self.sched.plan(now)
         if plan is None:
             return [], None
+        eff = None
+        if self.faults is not None:
+            # same point as the real engine: AFTER plan() — the scheduler
+            # has already composed (and mutated state for) this iteration
+            eff = self.faults.on_dispatch(self.instance_id, now)
+            if eff.oom:
+                self.sched.stats.recent_oom = True
+            if eff.crash is not None:
+                raise InstanceCrashed(self.instance_id, eff.crash.step)
         hbm_bytes = 0
         if self.fused_iteration and not self.ragged_native and plan.chunks:
             # flatten-and-repeat attention lowers each chunk onto S·L
@@ -188,6 +203,10 @@ class SimInstance:
             len(plan.decode), plan.prefill_tokens, plan.context_tokens,
             n_prefill_seqs=len(plan.chunks), fused=self.fused_iteration,
             hbm_bytes=hbm_bytes, tp_degree=self.tp_degree)
+        if eff is not None:
+            # straggler: the real path sleeps on the worker; the sim
+            # stretches virtual time by the same slowdown
+            dt = dt * eff.factor + eff.delay_s
         finished = []
         traced = self.tracer.enabled
         for r in plan.decode:
@@ -280,6 +299,25 @@ class SimConfig:
     # the scheduler-level release/adopt (the sim analogue of the
     # block-granular KV handoff), priced by CostModel.transfer_time
     roles: Optional[tuple] = None
+    # -- fault plane (mirrors ServingConfig; serving/faults.py,
+    # serving/recovery.py — SAME classes run in both paths) ------------------
+    # driver-level LLM retry knobs: carried for SIM_FIELD_MAP parity
+    # (the sim's virtual clock never blocks a driver thread)
+    llm_retries: int = 0
+    llm_backoff_s: float = 0.5
+    recovery_retries: int = 3            # crashes a request may survive
+    recovery_backoff_s: float = 0.0      # exp. backoff before re-queue (s)
+    # straggler fence threshold: real wall-clock — the sim carries the
+    # knob for parity but its injected straggles stretch virtual time
+    step_deadline_s: Optional[float] = None
+    slo_e2e_s: Optional[float] = None    # arms the LoadShedder valve
+    shed_queue_high: float = 8.0
+    shed_kv_high: float = 0.97
+    shed_patience: int = 3
+    handoff_retry_cap: int = 4           # probes before permanent strand
+    # sim-only: deterministic chaos schedule (None = fault-free).  The
+    # SAME FaultPlan object drives a real ServingCluster identically.
+    faults: Optional[FaultPlan] = None
 
     def role_of(self, instance_id: int) -> str:
         """Role of an instance id; ids past the declared topology
@@ -311,6 +349,16 @@ class SimConfig:
             tp_degree=serving.model_parallel,
             tracing=serving.tracing,
             roles=serving.roles,
+            llm_retries=serving.llm_retries,
+            llm_backoff_s=serving.llm_backoff_s,
+            recovery_retries=serving.recovery_retries,
+            recovery_backoff_s=serving.recovery_backoff_s,
+            step_deadline_s=serving.step_deadline_s,
+            slo_e2e_s=serving.slo_e2e_s,
+            shed_queue_high=serving.shed_queue_high,
+            shed_kv_high=serving.shed_kv_high,
+            shed_patience=serving.shed_patience,
+            handoff_retry_cap=serving.handoff_retry_cap,
         )
         base.update(overrides)
         return cls(**base)
@@ -341,6 +389,14 @@ class SimResults:
     instance_seconds: float = 0.0     # capacity actually paid for
     n_handoffs: int = 0               # prefill→decode transfers completed
     n_stranded: int = 0               # handoffs refused -> colocated decode
+    n_strand_retries: int = 0         # re-offers of already-stranded reqs
+    n_crashes: int = 0                # injected instance crashes handled
+    n_reconstructed: int = 0          # requests replay-reconstructed
+    n_shed: int = 0                   # requests dropped by the overload valve
+    n_lost: int = 0                   # recovery budget exhausted (FAILED)
+    n_workflows_total: int = 0        # post-warmup workflows STARTED (the
+    #                                   goodput denominator: shed/lost
+    #                                   workflows never reach `workflows`)
     scale_history: List[Tuple[float, str, int, int]] = \
         dataclasses.field(default_factory=list)
 
@@ -372,7 +428,24 @@ class SimResults:
             "instance_seconds": self.instance_seconds,
             "n_handoffs": float(self.n_handoffs),
             "n_stranded": float(self.n_stranded),
+            "n_strand_retries": float(self.n_strand_retries),
+            "n_crashes": float(self.n_crashes),
+            "n_reconstructed": float(self.n_reconstructed),
+            "n_shed": float(self.n_shed),
+            "n_lost": float(self.n_lost),
+            "n_workflows_total": float(self.n_workflows_total),
         }
+
+    def goodput(self, slo_e2e_s: Optional[float]) -> float:
+        """Fraction of post-warmup workflows that completed end-to-end
+        within ``slo_e2e_s`` — over every workflow STARTED, so shed and
+        lost workflows count against it (the honest denominator)."""
+        total = max(self.n_workflows_total, 1)
+        if slo_e2e_s is None:
+            return len(self.workflows) / total
+        good = sum(1 for w in self.workflows
+                   if w.done_time - w.start_time <= slo_e2e_s)
+        return good / total
 
 
 class Simulation:
@@ -419,6 +492,25 @@ class Simulation:
         self.finished_requests: List[Request] = []
         self.n_handoffs = 0
         self.n_stranded = 0
+        self.n_strand_retries = 0
+        # fault plane: SAME classes as ServingCluster — the injector
+        # consumes cfg.faults at the same per-instance dispatch ordinals,
+        # the RecoveryManager reconstructs crash victims through this
+        # Simulation's dispatcher/balancer/discard_engine surface, and
+        # the shedder (armed by slo_e2e_s) prices slack with cfg.cost
+        self.faults = (FaultInjector(cfg.faults, self.tracer)
+                       if cfg.faults is not None else None)
+        for inst in self.instances.values():
+            inst.faults = self.faults
+        self.recovery = RecoveryManager(
+            max_retries=cfg.recovery_retries,
+            backoff_s=cfg.recovery_backoff_s, tracer=self.tracer)
+        self.shedder = (LoadShedder(
+            slo_e2e_s=cfg.slo_e2e_s, cost=cfg.cost,
+            queue_high=cfg.shed_queue_high, kv_high=cfg.shed_kv_high,
+            patience=cfg.shed_patience, tracer=self.tracer)
+            if cfg.slo_e2e_s is not None else None)
+        self.lost_requests: List[Request] = []   # FAILED + SHED
         self._events: List[Tuple[float, int, str, object]] = []
         self._eseq = itertools.count()
         self._msg_counter = itertools.count()
@@ -503,6 +595,7 @@ class Simulation:
     def _scale_up(self, now: float, role: Optional[str] = None):
         iid = max(self.instances) + 1
         inst = self._make_instance(iid, role=role)
+        inst.faults = self.faults
         self.instances[iid] = inst
         self._all_instances.append(inst)
         self._spawn_time[iid] = now
@@ -559,6 +652,58 @@ class Simulation:
                              n=len(self.instances), role=removed.role)
         self._arm_balancer(now)
 
+    # ------------------------------------------------------------- fault plane
+    def discard_engine(self, inst: SimInstance):
+        """Drop a crashed instance (RecoveryManager callback — same name
+        as the real cluster's).  Its BlockManager dies with it; victims
+        were already captured off its scheduler by the caller."""
+        assert len(self.instances) > 1, \
+            "every instance crashed — nothing left to recover onto"
+        iid = inst.instance_id
+        self.instances.pop(iid, None)
+        self.instance_seconds += self._now - self._spawn_time.pop(iid,
+                                                                  self._now)
+
+    def _book_lost(self, req: Request, now: float):
+        """Account a request that will never finish (SHED by the valve or
+        FAILED past its recovery budget): unblock its workflow without
+        spawning downstream — the workflow stays incomplete and counts
+        against goodput."""
+        self.lost_requests.append(req)
+        wf = self.workflows.get(req.msg_id)
+        if wf is not None:
+            wf.outstanding -= 1
+
+    def _on_crash(self, inst: SimInstance, now: float):
+        """An injected crash surfaced from ``SimInstance.step``: hand the
+        dead instance to the shared RecoveryManager (fence + remove +
+        reconstruct), book budget-exhausted victims as lost, and arm the
+        events that resume the survivors."""
+        for req in self.recovery.on_crash(self, inst, now):
+            self._book_lost(req, now)
+        for t_ready in self.recovery.backoff_deadlines:
+            self._push(t_ready, "recovery", None)
+        self._arm_balancer(now)
+
+    def _shed_sweep(self, now: float):
+        """Overload valve at the balancer tick — same signals the
+        autoscaler reads, same LoadShedder rule as the real cluster."""
+        sig = self._signals(now)
+        max_kv = max((i.kv_used_frac for i in sig.instances), default=0.0)
+        self.shedder.observe(self.balancer.queued,
+                             max(1, len(self.instances)), max_kv)
+        victims = self.shedder.select(self.balancer.queue, now,
+                                      max(1, len(self.instances)))
+        if not victims:
+            return
+        vids = {r.req_id for r in victims}
+        self.balancer.queue = [r for r in self.balancer.queue
+                               if r.req_id not in vids]
+        depth = self.balancer.queued
+        for r in victims:
+            self.shedder.shed(r, now, depth)
+            self._book_lost(r, now)
+
     def _autoscale_tick(self, now: float):
         """Mirror of ``Autoscaler.step``: one decision per role pool,
         each from role-split signals (a flat sim is one general pool)."""
@@ -584,11 +729,20 @@ class Simulation:
         release/adopt (same progress-preserving path as ``_scale_down``,
         no KV bytes to move) with the wire time priced by
         ``CostModel.transfer_time``; refused requests are stranded for
-        colocated decode and retried every sweep."""
-        ready = src.sched.handoff_ready()
+        colocated decode and re-offered with exponential backoff up to
+        ``handoff_retry_cap`` attempts (then permanently colocated) —
+        the same :meth:`BatchScheduler.handoff_offers` /
+        :meth:`~BatchScheduler.note_strand` control as the real driver.
+        An injected transfer fault fails the sweep's gathered transfer
+        losslessly: every offer strands, nothing moves."""
+        cap = self.cfg.handoff_retry_cap
+        ready = src.sched.handoff_offers(cap)
         if not ready:
             return
-        targets = sorted(
+        faulted = (self.faults is not None
+                   and self.faults.transfer_fault(src.instance_id, now)
+                   is not None)
+        targets = [] if faulted else sorted(
             (i for i in self.instances.values()
              if i is not src and i.role != "prefill"
              and not (now < self.dispatcher.instances[
@@ -598,9 +752,20 @@ class Simulation:
         for req in ready:
             tgt = next((t for t in targets if t.sched.can_adopt(req)), None)
             if tgt is None:
-                if req.req_id not in src.sched.stranded:
+                fresh = req.req_id not in src.sched.stranded
+                permanent = src.sched.note_strand(req, cap)
+                if fresh:
                     self.n_stranded += 1
                     src.sched.allow_colocated_decode(req)
+                else:
+                    self.n_strand_retries += 1
+                if self.tracer.enabled:
+                    self.tracer.emit(
+                        "handoff-strand", req_id=req.req_id,
+                        instance_id=src.instance_id, agent=req.agent_name,
+                        msg_id=req.msg_id, ts=now,
+                        attempts=src.sched.strand_attempts[req.req_id],
+                        permanent=permanent)
                 continue
             n_resident = req.prefilled_len + req.output_len
             dt = self.cfg.cost.transfer_time(n_resident)
@@ -657,6 +822,9 @@ class Simulation:
         self._arm_balancer(now)
 
     def _on_request_finished(self, req: Request, now: float):
+        # unwind any crash-recovery identity BEFORE booking (no replayed
+        # tokens exist in the sim, but the record must retire)
+        self.recovery.on_finish(req)
         wf = self.workflows[req.msg_id]
         wf.outstanding -= 1
         wf.total_tokens += req.output_len
@@ -710,6 +878,8 @@ class Simulation:
                     if inst.recent_oom:
                         inst.recent_oom = False
                         self.dispatcher.on_oom(inst.instance_id, t)
+                if self.shedder is not None:
+                    self._shed_sweep(t)
                 self.balancer.tick(t)
                 if self.balancer.queued:
                     self._arm_balancer(t + BALANCER_PERIOD)
@@ -718,9 +888,14 @@ class Simulation:
                 # keep deciding while the system is live; stop re-arming
                 # once all work has drained so the event loop terminates
                 if (self._events or self.balancer.queued
+                        or self.recovery.pending
                         or any(i.has_work for i in self.instances.values())):
                     self._push(t + cfg.autoscale.decision_period_s,
                                "autoscale", None)
+            elif kind == "recovery":
+                # a reconstructed request's backoff expired: re-queue it
+                self.recovery.tick(self, t)
+                self._arm_balancer(t)
             elif kind == "instance_step":
                 inst = self.instances.get(payload)
                 if inst is None:
@@ -739,7 +914,13 @@ class Simulation:
                             inst.instance_id].ramps.pop(req.req_id, None)
                         self.balancer.enqueue(req)
                     self._arm_balancer(t)
-                finished, dt = inst.step(t)
+                try:
+                    finished, dt = inst.step(t)
+                except InstanceCrashed:
+                    # injected crash mid-iteration: the pool is gone with
+                    # the instance; reconstruct victims from host truth
+                    self._on_crash(inst, t)
+                    continue
                 if dt is None:
                     inst.busy = False
                 else:
@@ -755,6 +936,8 @@ class Simulation:
         warm_t = cfg.duration * cfg.warmup_frac
         wfs = [w for w in self.workflows.values()
                if w.done_time >= 0 and w.start_time >= warm_t]
+        n_total = sum(1 for w in self.workflows.values()
+                      if w.start_time >= warm_t)
         reqs = [r for r in self.finished_requests if r.arrival_time >= warm_t]
         qsum = sum(max(r.queueing_time(), 0.0) for r in reqs if not math.isnan(r.queueing_time()))
         esum = sum(r.e2e_latency for r in reqs if r.finish_time >= 0)
@@ -773,6 +956,12 @@ class Simulation:
             instance_seconds=self.instance_seconds,
             n_handoffs=self.n_handoffs,
             n_stranded=self.n_stranded,
+            n_strand_retries=self.n_strand_retries,
+            n_crashes=self.recovery.n_crashes,
+            n_reconstructed=self.recovery.n_reconstructed,
+            n_shed=self.shedder.n_shed if self.shedder else 0,
+            n_lost=self.recovery.n_failed,
+            n_workflows_total=n_total,
             scale_history=(list(self.autoscaler.history)
                            if self.autoscaler else []),
         )

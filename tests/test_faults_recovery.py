@@ -1,0 +1,459 @@
+"""Fault plane: deterministic injection, crash recovery with
+bit-identical replay, and SLO-aware load shedding.
+
+Four layers:
+
+* the PURE pieces — :class:`FaultPlan` generation is a pure function of
+  (seed, shape); :class:`FaultInjector` replays a plan identically from
+  per-instance dispatch/transfer ordinals; :class:`RecoveryManager`'s
+  retry budget, backoff timing, and replay bookkeeping run against stub
+  clusters with no model in sight; the :class:`LoadShedder` valve opens
+  only under sustained overload and picks deadline-hopeless victims
+  first;
+* the REAL cluster — a planned mid-drain crash storm loses zero
+  requests and every recovered stream is bit-identical to the
+  fault-free drain (argmax replay via prompt+emitted re-prefill);
+* the PROPERTY — for *any* seeded fault plan that spares one instance,
+  the recovered drain equals the fault-free drain exactly: no request
+  lost, none duplicated, no token differs (hypothesis when available,
+  seeded parametrization otherwise);
+* the SIMULATOR — the same plan classes drive the discrete-event sim
+  (shared recovery/shedding code), faulted runs are deterministic, and
+  shedding under overload keeps goodput-under-SLO strictly above the
+  no-shedding baseline.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.serving import (
+    DispatchEffects,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    LoadShedder,
+    RecoveryManager,
+    Request,
+    RequestState,
+    ServingCluster,
+    ServingConfig,
+    reset_request_ids,
+)
+from repro.sim.cost_model import CostModel
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is a tier-1 dep
+    HAVE_HYPOTHESIS = False
+
+
+# =============================================================================
+# pure: plans and injectors
+# =============================================================================
+
+
+def test_fault_plan_generation_is_deterministic():
+    kw = dict(horizon=16, n_crashes=2, n_straggles=3, n_ooms=2,
+              n_transfer_faults=1, spare=(0,))
+    a = FaultPlan.generate(17, [0, 1, 2, 3], **kw)
+    b = FaultPlan.generate(17, [0, 1, 2, 3], **kw)
+    assert a.specs == b.specs and len(a) == 8
+    # spared instances never crash; nobody crashes twice
+    crash_ids = [s.instance_id for s in a.crashes()]
+    assert 0 not in crash_ids
+    assert len(crash_ids) == len(set(crash_ids))
+    # a different seed names different chaos
+    c = FaultPlan.generate(18, [0, 1, 2, 3], **kw)
+    assert c.specs != a.specs
+
+
+def test_fault_plan_crashes_capped_by_crashable_instances():
+    plan = FaultPlan.generate(3, [0, 1], n_crashes=5, spare=(0,))
+    assert len(plan.crashes()) == 1
+    assert plan.crashes()[0].instance_id == 1
+
+
+def test_fault_injector_fires_at_planned_ordinals_and_replays():
+    plan = FaultPlan((
+        FaultSpec("crash", instance_id=1, step=2),
+        FaultSpec("straggle", instance_id=0, step=1, delay_s=0.2, factor=3.0),
+        FaultSpec("straggle", instance_id=0, step=1, delay_s=0.1, factor=2.0),
+        FaultSpec("oom", instance_id=0, step=1),
+        FaultSpec("transfer", instance_id=0, step=1),
+    ))
+
+    def run():
+        inj = FaultInjector(plan)
+        effects = []
+        for step in range(4):
+            for iid in (0, 1):
+                effects.append((iid, step, inj.on_dispatch(iid)))
+        transfers = [inj.transfer_fault(0) for _ in range(3)]
+        return inj, effects, transfers
+
+    inj, effects, transfers = run()
+    by_point = {(iid, step): eff for iid, step, eff in effects}
+    # steps without a planned fault are no-ops
+    assert by_point[(0, 0)] == DispatchEffects()
+    # both straggles and the oom land on (0, 1), combined
+    eff = by_point[(0, 1)]
+    assert eff.oom and eff.crash is None
+    assert eff.delay_s == pytest.approx(0.3)
+    assert eff.factor == pytest.approx(6.0)
+    # the crash fires exactly at (1, 2)
+    assert by_point[(1, 2)].crash is not None
+    assert by_point[(1, 3)].crash is None
+    # transfer ordinal 1 (the second outbound transfer) faults, once
+    assert transfers[0] is None and transfers[2] is None
+    assert transfers[1] is not None and transfers[1].kind == "transfer"
+    assert inj.n_fired == len(plan)
+    # a fresh injector over the same plan replays identically
+    _, effects2, transfers2 = run()
+    assert effects2 == effects
+    assert transfers2 == transfers
+
+
+# =============================================================================
+# pure: recovery manager on a stub cluster
+# =============================================================================
+
+
+class _StubModel:
+    def __init__(self, iid):
+        self.instance_id = iid
+        self.fenced_until = 0.0
+
+
+class _StubDispatcher:
+    def __init__(self):
+        self.fenced = []
+        self.removed = []
+        self._models = {}
+
+    def on_oom(self, iid, now):
+        self.fenced.append((iid, now))
+
+    def remove_instance(self, iid):
+        self.removed.append(iid)
+        return self._models.setdefault(iid, _StubModel(iid))
+
+
+class _StubBalancer:
+    def __init__(self):
+        self.queue = []
+
+    def enqueue(self, req):
+        self.queue.append(req)
+
+
+class _StubSched:
+    def __init__(self, waiting=(), running=()):
+        self.waiting = list(waiting)
+        self.running = list(running)
+
+
+class _StubEngine:
+    def __init__(self, iid, running):
+        self.instance_id = iid
+        self.sched = _StubSched(running=running)
+
+
+class _StubCluster:
+    def __init__(self):
+        self.dispatcher = _StubDispatcher()
+        self.balancer = _StubBalancer()
+        self.discarded = []
+
+    def discard_engine(self, engine):
+        self.discarded.append(engine.instance_id)
+
+
+def _req(msg_id, prompt, emitted=(), max_new=8, arrival=0.0):
+    r = Request(agent_name="a", msg_id=msg_id, prompt_len=len(prompt),
+                prompt_tokens=np.asarray(prompt, dtype=np.int32),
+                max_new_tokens=max_new, arrival_time=arrival)
+    r.output_tokens.extend(int(t) for t in emitted)
+    r.output_len = len(r.output_tokens)
+    r.prefilled_len = r.prompt_len
+    return r
+
+
+def test_recovery_reconstructs_with_extended_prompt_and_unwinds():
+    rm = RecoveryManager(max_retries=3)
+    cluster = _StubCluster()
+    req = _req("m0", [1, 2, 3], emitted=[7, 8], max_new=8)
+    failed = rm.on_crash(cluster, _StubEngine(0, [req]), now=1.0)
+    assert failed == [] and rm.n_crashes == 1 and rm.n_reconstructed == 1
+    # fenced + removed + discarded, re-queued on the balancer
+    assert cluster.dispatcher.fenced == [(0, 1.0)]
+    assert cluster.dispatcher.removed == [0] and cluster.discarded == [0]
+    assert cluster.dispatcher._models[0].fenced_until == float("inf")
+    assert cluster.balancer.queue == [req]
+    # the request re-prefills prompt + emitted, budget shrunk to match
+    assert req.state is RequestState.QUEUED
+    assert list(req.prompt_tokens) == [1, 2, 3, 7, 8]
+    assert req.prompt_len == 5 and req.max_new_tokens == 6
+    assert req.output_len == 0 and not req.output_tokens
+    assert rm.n_replayed_tokens == 2
+    # finish: replay re-emitted verbatim, original identity restored
+    req.output_tokens.extend([9, 10])
+    rm.on_finish(req)
+    assert list(req.output_tokens) == [7, 8, 9, 10]
+    assert req.prompt_len == 3 and req.max_new_tokens == 8
+    assert list(req.prompt_tokens) == [1, 2, 3]
+
+
+def test_recovery_retry_budget_exhausts_to_failed():
+    rm = RecoveryManager(max_retries=1)
+    cluster = _StubCluster()
+    req = _req("m0", [1, 2, 3])
+    assert rm.on_crash(cluster, _StubEngine(0, [req]), now=0.0) == []
+    failed = rm.on_crash(cluster, _StubEngine(1, [req]), now=1.0)
+    assert failed == [req] and req.state is RequestState.FAILED
+    assert req.finish_time == 1.0 and rm.n_failed == 1
+    assert len(cluster.balancer.queue) == 1  # only the first crash re-queued
+
+
+def test_recovery_backoff_delays_requeue_exponentially():
+    rm = RecoveryManager(max_retries=4, backoff_s=0.5)
+    cluster = _StubCluster()
+    req = _req("m0", [1, 2, 3])
+    rm.on_crash(cluster, _StubEngine(0, [req]), now=10.0)
+    assert cluster.balancer.queue == [] and rm.pending == 1
+    assert rm.backoff_deadlines == [10.5]
+    rm.tick(cluster, now=10.4)
+    assert cluster.balancer.queue == [] and rm.pending == 1
+    rm.tick(cluster, now=10.5)
+    assert cluster.balancer.queue == [req] and rm.pending == 0
+    # second crash: delay doubles
+    rm.on_crash(cluster, _StubEngine(1, [req]), now=20.0)
+    assert rm.backoff_deadlines == [21.0]
+
+
+def test_step_deadline_fences_stragglers():
+    rm = RecoveryManager(step_deadline_s=0.25)
+    cluster = _StubCluster()
+    eng = _StubEngine(2, [])
+    assert not rm.check_step_deadline(cluster, eng, elapsed_s=0.2, now=1.0)
+    assert rm.check_step_deadline(cluster, eng, elapsed_s=0.9, now=2.0)
+    assert cluster.dispatcher.fenced == [(2, 2.0)]
+    assert rm.n_straggler_fences == 1
+    # no deadline configured -> never fences
+    assert not RecoveryManager().check_step_deadline(
+        cluster, eng, elapsed_s=99.0, now=3.0)
+
+
+# =============================================================================
+# pure: the shedding valve
+# =============================================================================
+
+
+def test_shedder_opens_only_under_sustained_overload():
+    sh = LoadShedder(slo_e2e_s=10.0, cost=CostModel(), queue_high=4.0,
+                     patience=3)
+    assert not sh.observe(99, n_instances=2, max_kv_frac=0.1)   # streak 1
+    assert not sh.observe(99, n_instances=2, max_kv_frac=0.1)   # streak 2
+    assert not sh.observe(0, n_instances=2, max_kv_frac=0.1)    # calm: reset
+    assert not sh.observe(99, n_instances=2, max_kv_frac=0.1)
+    assert not sh.observe(99, n_instances=2, max_kv_frac=0.1)
+    assert sh.observe(99, n_instances=2, max_kv_frac=0.1)       # open
+    # KV pressure with a non-empty queue counts as overload too
+    sh2 = LoadShedder(slo_e2e_s=10.0, cost=CostModel(), patience=1)
+    assert sh2.observe(1, n_instances=4, max_kv_frac=0.99)
+    # ... but an empty queue never does (nothing to shed)
+    sh3 = LoadShedder(slo_e2e_s=10.0, cost=CostModel(), patience=1)
+    assert not sh3.observe(0, n_instances=4, max_kv_frac=0.99)
+
+
+def test_shedder_picks_hopeless_then_lowest_slack():
+    cost = CostModel()
+    sh = LoadShedder(slo_e2e_s=5.0, cost=cost, queue_high=2.0, patience=1)
+    now = 100.0
+    hopeless = _req("old", [1] * 8, max_new=16, arrival=now - 60.0)
+    fresh = [_req(f"f{i}", [1] * 8, max_new=16, arrival=now - 0.1 * i)
+             for i in range(4)]
+    queue = [hopeless] + fresh
+    assert sh.select(queue, now, n_instances=1) == []  # valve still closed
+    sh.observe(len(queue), n_instances=1, max_kv_frac=0.5)
+    victims = sh.select(queue, now, n_instances=1)
+    # the deadline-hopeless request goes first; then the overflow past
+    # the valve line (2 * 1 instance), lowest slack (= oldest) first
+    assert victims[0] is hopeless
+    assert len(victims) == 1 + (len(fresh) - 2)
+    victim_ids = {v.msg_id for v in victims}
+    assert victim_ids == {"old", "f3", "f2"}
+    sh.shed(hopeless, now, queue_depth=len(queue))
+    assert hopeless.state is RequestState.SHED and sh.n_shed == 1
+
+
+# =============================================================================
+# real cluster: crash storms recover bit-identically
+# =============================================================================
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _orch(num_blocks=64, block_size=8):
+    from repro.core import Orchestrator
+    from repro.core.orchestrator import HardwareProfile
+    return Orchestrator(hardware=HardwareProfile(
+        decode_tok_per_s=20.0, kv_capacity_tokens=num_blocks * block_size))
+
+
+_CHAOS_CFG = ServingConfig(num_blocks=64, block_size=8, max_batch=4,
+                           n_instances=3, policy="fcfs",
+                           prefix_caching=True, recovery_retries=3)
+
+
+def _chaos_reqs(n=8, max_new=10):
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, 500, 16).astype(np.int32)
+    out = []
+    for i in range(n):
+        toks = np.concatenate(
+            [prefix, rng.integers(0, 500, 5 + (i % 9)).astype(np.int32)])
+        out.append(Request(agent_name=f"a{i % 3}", msg_id=f"m{i}",
+                           prompt_len=len(toks), prompt_tokens=toks,
+                           max_new_tokens=max_new, arrival_time=float(i)))
+    return out
+
+
+def _drain(cluster):
+    done = []
+    for _ in range(100_000):
+        done.extend(cluster.step())
+        if not cluster.has_work:
+            break
+    cluster.close()
+    return done
+
+
+def _fault_free_streams(model, params):
+    reset_request_ids()
+    cluster = ServingCluster.from_config(model, params, _orch(), _CHAOS_CFG)
+    for q in _chaos_reqs():
+        cluster.submit(q)
+    return {r.msg_id: list(r.output_tokens) for r in _drain(cluster)}
+
+
+@pytest.fixture(scope="module")
+def chaos_baseline(model_and_params):
+    model, params = model_and_params
+    base = _fault_free_streams(model, params)
+    assert len(base) == 8
+    return base
+
+
+def _assert_plan_recovers(model, params, base, plan):
+    """The chaos oracle: under ``plan``, the drain loses no request,
+    duplicates none, and every stream matches the fault-free drain."""
+    reset_request_ids()
+    cluster = ServingCluster.from_config(model, params, _orch(), _CHAOS_CFG,
+                                         faults=plan)
+    for q in _chaos_reqs():
+        cluster.submit(q)
+    done = _drain(cluster)
+    failed = [r.msg_id for r in done if r.state is RequestState.FAILED]
+    assert not failed, f"requests failed under plan {plan.specs}: {failed}"
+    streams = {}
+    for r in done:
+        assert r.msg_id not in streams, f"request {r.msg_id} duplicated"
+        streams[r.msg_id] = list(r.output_tokens)
+    assert set(streams) == set(base), \
+        f"lost/extra requests: {set(base) ^ set(streams)}"
+    mismatched = [m for m in base if streams[m] != base[m]]
+    assert not mismatched, \
+        f"recovered streams diverged for {mismatched} under {plan.specs}"
+    return cluster.metrics_snapshot()
+
+
+def test_cluster_crash_storm_recovers_bit_identically(model_and_params,
+                                                      chaos_baseline):
+    model, params = model_and_params
+    plan = FaultPlan.generate(5, [0, 1, 2], horizon=10, n_crashes=2,
+                              spare=(0,))
+    snap = _assert_plan_recovers(model, params, chaos_baseline, plan)
+    assert snap["n_crashes"] == 2
+    assert snap["n_instances"] == 1          # both victims stay removed
+    assert snap["n_reconstructed"] >= snap["n_crashes"]
+    assert snap["n_recovery_failed"] == 0
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 9999))
+    def test_any_fault_plan_recovers_bit_identically(model_and_params,
+                                                     chaos_baseline, seed):
+        model, params = model_and_params
+        plan = FaultPlan.generate(seed, [0, 1, 2], horizon=12, n_crashes=2,
+                                  n_straggles=1, n_ooms=1, spare=(0,),
+                                  straggle_delay_s=0.01)
+        _assert_plan_recovers(model, params, chaos_baseline, plan)
+
+else:  # pragma: no cover - hypothesis is a tier-1 dep
+
+    @pytest.mark.parametrize("seed", [0, 7, 123, 2024])
+    def test_any_fault_plan_recovers_bit_identically(model_and_params,
+                                                     chaos_baseline, seed):
+        model, params = model_and_params
+        plan = FaultPlan.generate(seed, [0, 1, 2], horizon=12, n_crashes=2,
+                                  n_straggles=1, n_ooms=1, spare=(0,),
+                                  straggle_delay_s=0.01)
+        _assert_plan_recovers(model, params, chaos_baseline, plan)
+
+
+# =============================================================================
+# simulator: shared fault plane, deterministic chaos, shedding goodput
+# =============================================================================
+
+
+def _sim_kw(**over):
+    from repro.sim.workload import make_app
+    kw = dict(apps=[make_app("QA", "G+M")], policy="kairos", rate=4.0,
+              duration=10.0, n_instances=3, kv_capacity_tokens=4096,
+              block_size=16, max_batch=8, seed=1)
+    kw.update(over)
+    return kw
+
+
+def test_sim_faulted_run_loses_nothing_and_is_deterministic():
+    from repro.sim.simulator import SimConfig, Simulation
+    plan = FaultPlan.generate(3, [0, 1, 2], horizon=12, n_crashes=1,
+                              n_straggles=1, n_ooms=1, spare=(0,))
+    kw = _sim_kw()
+    res = Simulation(SimConfig(faults=plan, recovery_backoff_s=0.1,
+                               **kw)).run()
+    assert res.n_crashes == 1 and res.n_lost == 0
+    assert res.n_reconstructed >= 1
+    # every workflow the fault-free run completes, the faulted run does too
+    res0 = Simulation(SimConfig(**kw)).run()
+    assert len(res.workflows) == len(res0.workflows)
+    # same plan, fresh sim -> identical summary (replayable chaos)
+    res2 = Simulation(SimConfig(faults=plan, recovery_backoff_s=0.1,
+                                **kw)).run()
+    assert res2.summary() == res.summary()
+
+
+def test_sim_shedding_beats_no_shedding_goodput_under_overload():
+    from repro.sim.simulator import SimConfig, Simulation
+    kw = _sim_kw(rate=12.0, duration=20.0, n_instances=2,
+                 kv_capacity_tokens=3072, seed=3)
+    slo = 12.0
+    res_off = Simulation(SimConfig(**kw)).run()
+    res_on = Simulation(SimConfig(slo_e2e_s=slo, shed_queue_high=4.0,
+                                  **kw)).run()
+    assert res_on.n_shed > 0, "valve never opened under overload"
+    assert res_off.n_shed == 0
+    # the acceptance oracle: goodput-under-SLO strictly above baseline
+    assert res_on.goodput(slo) > res_off.goodput(slo), \
+        (res_on.goodput(slo), res_off.goodput(slo))

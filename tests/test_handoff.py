@@ -234,9 +234,10 @@ def test_handoff_refused_full_decode_pool_decodes_colocated(runner0):
 
 
 def test_stranded_request_hands_off_once_capacity_frees(runner0):
-    """Stranded requests stay in handoff_ready: when the decode pool
-    frees up mid-decode, the retry migrates them (mid-decode transfers
-    are bit-identical, inherited from the migration layer)."""
+    """Stranded requests stay re-offerable (with backoff): when the
+    decode pool frees up mid-decode, the next offer migrates them
+    (mid-decode transfers are bit-identical, inherited from the
+    migration layer)."""
     base = _baseline(runner0, dict(n=2, max_new=10))
     reset_request_ids()
     e0 = _engine(runner0, 0, role="prefill")
@@ -252,11 +253,17 @@ def test_stranded_request_hands_off_once_capacity_frees(runner0):
         drive_handoffs(cluster, now=float(it))
     assert e0.sched.stranded and all(q.output_len > 0
                                      for q in e0.sched.running)
-    # capacity appears: swap in a decode instance with a real pool
+    # capacity appears: swap in a decode instance with a real pool.
+    # The stranded pair is mid-backoff, so sweep until their next offer
+    # comes due (bounded by the exponential backoff window).
     e2 = _engine(runner0, 2, role="decode")
     cluster.engines[1] = e2
-    hs = drive_handoffs(cluster, now=100.0)
-    assert hs["n_handoffs"] == 2, "retry must move the stranded requests"
+    moved = 0
+    for it in range(64):
+        moved += drive_handoffs(cluster, now=100.0 + it)["n_handoffs"]
+        if moved:
+            break
+    assert moved == 2, "re-offer must move the stranded requests"
     assert not e0.sched.stranded, "handoff clears the stranded set"
     for it in range(4000):
         for e in cluster.engines:
@@ -264,6 +271,51 @@ def test_stranded_request_hands_off_once_capacity_frees(runner0):
         if not any(e.sched.has_work for e in cluster.engines):
             break
     assert _tokens(done) == base
+
+
+def test_strand_retry_cap_stops_reprobing_full_pool(runner0):
+    """A permanently full decode pool must stop costing a probe per
+    stranded request per sweep: offers back off exponentially and stop
+    for good past the retry cap (the strand becomes permanent), with one
+    ``handoff-strand`` event per failed offer and the final one flagged
+    ``permanent``.  The drain stays lossless throughout."""
+    # long decodes: offers back off at sweeps ~1,3,7,15,31, so the cap
+    # (4) trips while the requests are still running
+    base = _baseline(runner0, dict(n=2, max_new=40))
+    reset_request_ids()
+    e0 = _engine(runner0, 0, role="prefill")
+    e1 = _engine(runner0, 1, role="decode", num_blocks=2)  # never adopts
+    tracer = Tracer(clock=lambda: 0.0)
+    cluster = _MiniCluster([e0, e1], tracer=tracer)
+    for q in _reqs(n=2, max_new=40):
+        e0.submit(q)
+    done = []
+    for it in range(4000):
+        for e in cluster.engines:
+            done.extend(e.step())
+        drive_handoffs(cluster, now=float(it))
+        if not any(e.sched.has_work for e in cluster.engines):
+            break
+    assert _tokens(done) == base, "capped strands must stay lossless"
+    strands = [e for e in tracer.events() if e.kind == "handoff-strand"]
+    per_req = {}
+    for e in strands:
+        per_req.setdefault(e.req_id, []).append(e)
+    cap = 4   # _MiniCluster has no config -> drive_handoffs default
+    assert set(per_req) == {q.req_id for q in done}
+    for req_id, evts in per_req.items():
+        # one event per failed offer, never more than cap+1 (the offer
+        # that trips the cap is the last one ever made)
+        assert len(evts) <= cap + 1, \
+            f"req {req_id} probed {len(evts)} times, cap is {cap}"
+        assert evts[-1].data["permanent"], \
+            "the last offer must mark the strand permanent"
+        assert [e.data["attempts"] for e in evts] == \
+            list(range(1, len(evts) + 1))
+    # well past the cap the ready set is non-empty only while decoding;
+    # offers stop regardless: no strand event after the permanent one
+    n_after = sum(1 for e in strands if e.data["attempts"] > cap + 1)
+    assert n_after == 0
 
 
 def _run_cluster(runner0, roles, *, num_blocks=28, n=6, max_new=8):

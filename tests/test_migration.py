@@ -281,3 +281,82 @@ except ImportError:   # pragma: no cover - hypothesis ships in test extras
     def test_migration_roundtrip_property(seed, migrate_every, chunk,
                                           runner0):
         _roundtrip_property(seed, migrate_every, chunk, runner0)
+
+
+# ---------------------------------------------------------------------------
+# partial-failure hardening: transfer faults roll back losslessly
+# ---------------------------------------------------------------------------
+
+
+def _accounting(bm):
+    return (bm.free_blocks, bm.cached_blocks, bm.hard_used_blocks,
+            sorted(bm.owned_seqs()))
+
+
+def test_migrate_many_transfer_fault_rolls_back_without_leaks(runner0):
+    """A gathered transfer that fails AFTER target allocation (the worst
+    point: every request already adopted, blocks allocated, pending
+    tokens planted) must leave both BlockManagers balanced, every
+    request RUNNING on the source with identical progress, and the
+    subsequent drain bit-identical — the leak-witness regression for the
+    lossless-refusal contract."""
+    from repro.serving import (FaultInjector, FaultPlan, FaultSpec,
+                               MigrationError, migrate_many)
+    base = _baseline(runner0)
+    reset_request_ids()
+    e0, e1 = _engine(runner0, 0), _engine(runner0, 1)
+    for q in _reqs():
+        e0.submit(q)
+    done = []
+    for _ in range(3):
+        done.extend(e0.step())
+    moved = list(e0.sched.running)
+    assert moved, "need live work to make the rollback real"
+    progress = {q.req_id: (q.prefilled_len, list(q.output_tokens))
+                for q in moved}
+    acc0, acc1 = _accounting(e0.bm), _accounting(e1.bm)
+    # plan one transfer fault at engine 0's first outbound transfer
+    inj = FaultInjector(FaultPlan(
+        (FaultSpec(kind="transfer", instance_id=0, step=0),)))
+    with pytest.raises(MigrationError):
+        migrate_many(e0, e1, moved, now=0.0, faults=inj)
+    assert inj.n_fired == 1
+    # both managers balance; the target kept nothing
+    assert _accounting(e0.bm) == acc0, "source accounting must round-trip"
+    assert _accounting(e1.bm) == acc1, "target leaked blocks on rollback"
+    assert not e1.sched.running and not e1.has_pending
+    for q in moved:
+        assert q.instance_id == 0 and q in e0.sched.running
+        assert (q.prefilled_len, list(q.output_tokens)) == \
+            progress[q.req_id], "rollback must not lose progress"
+    # the planned fault fired once; the retry goes through cleanly
+    snaps, skipped = migrate_many(e0, e1, moved, now=1.0, faults=inj)
+    assert len(snaps) == len(moved) and not skipped
+    done.extend(_drain(e0, e1))
+    assert _tokens(done) == base
+
+
+def test_migrate_transfer_fault_single_request_rolls_back(runner0):
+    """Single-request :func:`migrate` under a planned transfer fault:
+    same lossless rollback, then the fault-free retry continues the
+    stream bit-identically."""
+    from repro.serving import (FaultInjector, FaultPlan, FaultSpec,
+                               MigrationError)
+    base = _baseline(runner0, dict(n=2, max_new=10))
+    reset_request_ids()
+    e0, e1 = _engine(runner0, 0), _engine(runner0, 1)
+    for q in _reqs(n=2, max_new=10):
+        e0.submit(q)
+    done = list(e0.step())
+    victim = e0.sched.running[0]
+    acc1 = _accounting(e1.bm)
+    inj = FaultInjector(FaultPlan(
+        (FaultSpec(kind="transfer", instance_id=0, step=0),)))
+    with pytest.raises(MigrationError):
+        migrate(e0, e1, victim, now=0.0, faults=inj)
+    assert victim in e0.sched.running and victim.instance_id == 0
+    assert _accounting(e1.bm) == acc1
+    migrate(e0, e1, victim, now=1.0, faults=inj)   # plan exhausted: clean
+    assert victim.instance_id == 1
+    done.extend(_drain(e0, e1))
+    assert _tokens(done) == base
